@@ -1,0 +1,38 @@
+"""Communication-volume table (paper Sec. 2.2: S ~= k/J compression).
+
+Analytic wire words/round/worker for the two aggregation collectives at
+the assigned sparsities, for each architecture's J — the quantity the
+paper's technique actually reduces. Cross-checked against the dry-run
+HLO collective bytes in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from benchmarks.roofline import count_params
+from repro import configs as cfglib
+from repro.core import wire_words_per_worker
+
+N_WORKERS = 16
+
+
+def run():
+    rows = []
+    for arch in sorted(cfglib.ARCHS):
+        if arch == "paper-resnet-proxy":
+            continue
+        cfg = cfglib.get_config(arch)
+        J = int(count_params(cfg)["total"])
+        for S in (0.01, 0.001):
+            k = max(1, int(S * J))
+            dense = wire_words_per_worker("dense_allreduce", J, k, N_WORKERS)
+            sparse = wire_words_per_worker("sparse_allgather", J, k, N_WORKERS)
+            rows.append(
+                row(
+                    f"comm/{arch}/S={S}",
+                    0.0,
+                    f"J={J};dense_words={dense};sparse_words={sparse};"
+                    f"allgather_reduction={dense / sparse:.1f}x;"
+                    f"uplink_reduction={J / (2 * k):.0f}x",
+                )
+            )
+    return rows

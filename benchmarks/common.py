@@ -1,0 +1,29 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+
+
+def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (blocking on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return 1e6 * times[len(times) // 2]
+
+
+def row(name: str, us: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+def emit(rows) -> None:
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

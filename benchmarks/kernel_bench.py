@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks (interpret-mode on CPU; layout-identical to TPU).
+
+us_per_call is CPU interpret-mode time (NOT TPU perf); the derived column
+reports the analytic HBM-traffic model that determines TPU time:
+fused regtopk_score moves 5 J-sized streams vs ~9 unfused.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.kernels import ops, ref
+
+N = 1 << 18  # 256k elements
+
+
+def run():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    a, a_prev, g_prev = (3.0 * jax.random.normal(k, (N,)) for k in ks[:3])
+    s_prev = (jax.random.uniform(ks[3], (N,)) > 0.5).astype(jnp.float32)
+    rows = []
+
+    fused = lambda x: ops.regtopk_score(
+        x, a_prev, s_prev, g_prev, omega=0.05, mu=1.0, interpret=True
+    )
+    unfused = jax.jit(
+        lambda x: ref.regtopk_score_ref(x, a_prev, s_prev, g_prev, omega=0.05, mu=1.0)
+    )
+    rows.append(row("kernel/regtopk_score_fused", time_call(fused, a, iters=3),
+                    f"J={N};streams=5x4B;tpu_time_est={5*4*N/819e9*1e6:.1f}us"))
+    rows.append(row("kernel/regtopk_score_ref", time_call(unfused, a, iters=3),
+                    f"J={N};streams~9x4B"))
+
+    score = jnp.abs(a)
+    k = max(1, int(0.001 * N))
+    thr = lambda s: ops.threshold_topk_mask(s, k, interpret=True)
+    exact = jax.jit(lambda s: jax.lax.top_k(s, k))
+    rows.append(row("kernel/threshold_topk", time_call(thr, score, iters=3),
+                    f"k={k};passes=25;tpu_time_est={25*4*N/819e9*1e6:.1f}us"))
+    rows.append(row("kernel/exact_topk_xla", time_call(exact, score, iters=3),
+                    f"k={k};sort_bound"))
+
+    hier = lambda s: ops.hierarchical_topk(s, k, m=16, interpret=True)
+    rows.append(row("kernel/hierarchical_topk", time_call(hier, score, iters=3),
+                    f"k={k};candidates={N // 8192 * 16}"))
+    return rows

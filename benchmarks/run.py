@@ -1,0 +1,64 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  fig1_toy      — paper Fig. 1 (toy logistic; exact repro)
+  fig3_linreg   — paper Fig. 3 (linreg gap vs iters)
+  fig4_hetero   — paper Fig. 4 (homogeneous vs heterogeneous)
+  fig5_sweep    — paper Fig. 5 (gap vs sparsity, seed-averaged)
+  tab2_lowdim   — paper App. B (low-dim tracking + mask overlap)
+  fig6_nn_proxy — paper Fig. 6/Tab. 1 (NN training proxy)
+  fig7_mu_sweep — paper Fig. 7 (mu sensitivity; mu=0 == Top-k)
+  comm_volume   — Sec. 2.2 compression table
+  kernel_bench  — Pallas kernel microbenches
+  roofline      — §Roofline terms from the dry-run artifacts
+  perf_summary  — §Perf hillclimb before/after + multi-pod scaling
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig1_toy",
+    "tab2_lowdim",
+    "fig3_linreg",
+    "fig4_hetero",
+    "fig5_sweep",
+    "fig6_nn_proxy",
+    "fig7_mu_sweep",
+    "comm_volume",
+    "kernel_bench",
+    "serve_bench",
+    "roofline",
+    "perf_summary",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module list")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for r in mod.run():
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}",
+                      flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name},nan,ERROR:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

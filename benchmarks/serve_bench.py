@@ -1,0 +1,54 @@
+"""Serving microbenchmark — decode tokens/s per family (smoke configs, CPU).
+
+Exercises the exact serve_step the decode_32k / long_500k dry-run shapes
+lower (KV ring buffers, SSM state carry, MoE dropless decode), end to end
+through jit. Absolute numbers are CPU-host; the derived column carries the
+per-token cache/state bytes that bound TPU decode.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro import configs as cfglib
+from repro.models import get_family
+
+ARCHS = ["qwen2.5-3b", "mamba2-780m", "zamba2-7b", "mixtral-8x7b",
+         "granite-3-8b-swa"]
+BATCH, TOKENS, MAXLEN = 4, 16, 64
+
+
+def _bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def run():
+    rows = []
+    for arch in ARCHS:
+        cfg = cfglib.get_config(arch).smoke_variant()
+        mod = get_family(cfg)
+        params, _ = mod.init(jax.random.PRNGKey(0), cfg)
+        cache = mod.init_cache(cfg, BATCH, MAXLEN)
+        step = jax.jit(lambda p, c, t: mod.decode_step(p, cfg, c, t))
+        tok = jnp.zeros((BATCH, 1), jnp.int32)
+        logits, cache = step(params, cache, tok)  # compile
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for _ in range(TOKENS):
+            logits, cache = step(params, cache, tok)
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        rows.append(
+            row(
+                f"serve/{arch}",
+                1e6 * dt / TOKENS,
+                f"tok_s={BATCH * TOKENS / dt:.1f};"
+                f"cache_bytes={_bytes(cache)};smoke",
+            )
+        )
+    return rows

@@ -1,0 +1,24 @@
+"""End-to-end driver: sparsified data-parallel LM training.
+
+Thin wrapper over repro.launch.train; by default trains the paper-proxy
+model for a few hundred steps on the host mesh. For multi-worker CPU
+simulation, run with extra host devices:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/distributed_train.py --steps 200
+
+On a real TPU slice pass --mesh production --arch qwen2.5-3b (the ~100M+
+configuration path exercised by the multi-pod dry-run).
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += [
+            "--arch", "paper-resnet-proxy", "--steps", "200",
+            "--global-batch", "8", "--seq", "64", "--sparsity", "0.01",
+            "--log-every", "20",
+        ]
+    main()

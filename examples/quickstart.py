@@ -1,0 +1,40 @@
+"""Quickstart: the paper's algorithm in 40 lines.
+
+Reproduces the motivating example (paper Fig. 1): two workers whose large
+gradient entries cancel at the server. Top-1 sparsification stalls;
+RegTop-1 (the paper's Bayesian-regularized selection) tracks unsparsified
+training.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DistributedSim, SparsifierConfig
+
+X = jnp.array([[100.0, 1.0], [-100.0, 1.0]])  # one data point per worker
+
+
+def grad_fn(theta, n):
+    e = jnp.exp(-jnp.dot(theta, X[n]))
+    return -e * X[n] / (1 + e)
+
+
+def loss(theta):
+    return jnp.mean(jnp.log(1 + jnp.exp(-X @ theta)))
+
+
+if __name__ == "__main__":
+    print(f"{'iter':>5s} {'top-1':>10s} {'regtop-1':>10s} {'dense':>10s}")
+    traces = {}
+    for kind in ("topk", "regtopk", "none"):
+        cfg = SparsifierConfig(kind=kind, sparsity=0.5, mu=1.0)
+        sim = DistributedSim(grad_fn, n_workers=2, length=2,
+                             sparsifier_cfg=cfg, learning_rate=0.9)
+        _, tr = sim.run(jnp.array([0.0, 1.0]), 100, trace_fn=loss)
+        traces[kind] = np.asarray(tr)
+    for t in (0, 10, 25, 50, 75, 99):
+        print(f"{t:5d} {traces['topk'][t]:10.4f} "
+              f"{traces['regtopk'][t]:10.4f} {traces['none'][t]:10.4f}")
+    print("\nTop-1 is pinned at its initial loss while RegTop-1 matches "
+          "dense training — the paper's Fig. 1.")

@@ -1,0 +1,16 @@
+"""Batched-decode serving example (smoke-size model on CPU).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-780m
+
+Runs the same serve_step the decode_32k / long_500k dry-run shapes lower.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--arch" not in " ".join(sys.argv):
+        sys.argv += ["--arch", "qwen2.5-3b"]
+    if "--smoke" not in sys.argv:
+        sys.argv += ["--smoke"]
+    main()

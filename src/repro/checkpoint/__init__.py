@@ -1,0 +1,4 @@
+"""Pytree checkpointing (npz payload + msgpack treedef)."""
+from repro.checkpoint.store import restore, save
+
+__all__ = ["save", "restore"]

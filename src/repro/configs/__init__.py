@@ -1,0 +1,65 @@
+"""Assigned architecture configs (public-literature pool) + input shapes.
+
+Every config cites its source; exact dims per the assignment table.
+Select with ``--arch <id>``; ``ARCHS[id]()`` returns the full ModelConfig,
+``ARCHS[id]().smoke_variant()`` the reduced CPU-test variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Tuple
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = [
+    "whisper_tiny",
+    "qwen2_5_3b",
+    "internvl2_1b",
+    "mamba2_780m",
+    "chatglm3_6b",
+    "zamba2_7b",
+    "mixtral_8x7b",
+    "deepseek_moe_16b",
+    "granite_3_8b",
+    "phi3_medium_14b",
+    "granite_3_8b_swa",  # beyond-assignment: SWA variant (long_500k escape hatch)
+    "paper_resnet_proxy",  # the paper's own NN experiment proxy
+]
+
+ARCHS: Dict[str, Callable[[], ModelConfig]] = {}
+for _m in _ARCH_MODULES:
+    mod = importlib.import_module(f"repro.configs.{_m}")
+    ARCHS[mod.CONFIG.name] = (lambda c: (lambda: c))(mod.CONFIG)
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return ARCHS[arch]()
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {arch!r}; available: {sorted(ARCHS)}"
+        ) from None
+
+
+# --- assigned input shapes: (seq_len, global_batch, kind) ------------------
+INPUT_SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+# archs able to run long_500k (sub-quadratic / bounded-memory decode);
+# see DESIGN.md §Shape-applicability for the skip rationale.
+LONG_CONTEXT_OK = {
+    "mamba2-780m",
+    "zamba2-7b",
+    "mixtral-8x7b",
+    "granite-3-8b-swa",
+}
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_OK
+    return True

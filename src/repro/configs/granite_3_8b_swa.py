@@ -1,0 +1,21 @@
+"""granite-3-8b-swa [dense, beyond-assignment]: sliding-window variant.
+
+Same dims as granite-3-8b with a 4096 sliding window — demonstrates the
+dense->SWA escape hatch that makes long_500k decode feasible (DESIGN.md
+§Shape-applicability).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b-swa",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12800,
+    vocab=49155,
+    sliding_window=4096,
+    source="hf:ibm-granite/granite-3.0-2b-base (+SWA, ours)",
+)

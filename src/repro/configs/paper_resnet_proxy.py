@@ -1,0 +1,21 @@
+"""Paper-native NN experiment proxy (ResNet-18/CIFAR-10 stand-in).
+
+The paper trains ResNet-18 (11M params) on CIFAR-10 with 8 workers.
+Offline container -> a compact transformer classifier on synthetic data
+with a comparable parameter count exercises the same sparsified-DP path.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-resnet-proxy",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=32,
+    d_ff=1024,
+    vocab=1024,
+    remat=False,
+    source="paper Sec. 5.2 (ResNet-18/CIFAR-10), proxied",
+)

@@ -1,0 +1,57 @@
+"""RegTop-k core: Bayesian gradient sparsification (paper's contribution)."""
+from repro.core.aggregate import (
+    AGGREGATIONS,
+    allgather_scatter,
+    allreduce_dense,
+    dense_mean,
+    scatter_add_payloads,
+    wire_words_per_worker,
+)
+from repro.core.selectors import (
+    SELECTORS,
+    exact_topk_mask,
+    fixed_k_payload,
+    get_selector,
+    mask_to_payload,
+    sparsity_to_k,
+    threshold_topk_mask,
+)
+from repro.core.simulator import DistributedSim, SimState
+from repro.core.sparsify import (
+    KINDS,
+    HardThreshold,
+    NoneSparsifier,
+    RegTopK,
+    Sparsifier,
+    SparsifierConfig,
+    SparsifierState,
+    TopK,
+    make_sparsifier,
+)
+
+__all__ = [
+    "AGGREGATIONS",
+    "DistributedSim",
+    "HardThreshold",
+    "KINDS",
+    "NoneSparsifier",
+    "RegTopK",
+    "SELECTORS",
+    "SimState",
+    "Sparsifier",
+    "SparsifierConfig",
+    "SparsifierState",
+    "TopK",
+    "allgather_scatter",
+    "allreduce_dense",
+    "dense_mean",
+    "exact_topk_mask",
+    "fixed_k_payload",
+    "get_selector",
+    "make_sparsifier",
+    "mask_to_payload",
+    "scatter_add_payloads",
+    "sparsity_to_k",
+    "threshold_topk_mask",
+    "wire_words_per_worker",
+]

@@ -1,0 +1,124 @@
+"""Top-k selection primitives.
+
+All selectors operate on a 1-D non-negative ``score`` vector and return a
+``{0,1}`` float mask (and optionally the selected values/indices as static
+fixed-``k`` payloads, as required for TPU/XLA static shapes).
+
+Two families:
+
+* ``exact``      — ``jax.lax.top_k`` on the score (sort-bound, reference).
+* ``threshold``  — iterative bisection for a threshold ``tau`` such that
+  ``count(score >= tau) ~= k``; streaming / VPU-friendly, and the primitive
+  that :mod:`repro.kernels.threshold_topk` implements as a Pallas kernel.
+  The mask cardinality is approximately ``k`` (exactly ``k`` when there are
+  no ties at ``tau`` and the bisection fully converges); callers that need a
+  fixed-size payload combine it with :func:`fixed_k_payload`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def exact_topk_mask(score: jax.Array, k: int) -> jax.Array:
+    """Exact top-k mask via ``lax.top_k`` (ties broken by index order)."""
+    if score.ndim != 1:
+        raise ValueError(f"score must be 1-D, got {score.shape}")
+    k = int(k)
+    if k <= 0:
+        return jnp.zeros_like(score)
+    if k >= score.shape[0]:
+        return jnp.ones_like(score)
+    _, idx = jax.lax.top_k(score, k)
+    return jnp.zeros_like(score).at[idx].set(1.0)
+
+
+def threshold_topk_mask(
+    score: jax.Array, k: int, *, n_iters: int = 24
+) -> jax.Array:
+    """Approximate top-k mask via bisection on the selection threshold.
+
+    Finds ``tau`` in ``[0, max(score)]`` such that ``sum(score >= tau)`` is
+    the smallest count ``>= k``, using ``n_iters`` halvings. Cost is
+    ``O(n_iters * J)`` elementwise work with no sort — the pattern the
+    Pallas ``threshold_topk`` kernel accelerates with one histogram pass.
+    """
+    if score.ndim != 1:
+        raise ValueError(f"score must be 1-D, got {score.shape}")
+    k = int(k)
+    if k <= 0:
+        return jnp.zeros_like(score)
+    if k >= score.shape[0]:
+        return jnp.ones_like(score)
+
+    hi0 = jnp.max(score)
+    lo0 = jnp.zeros_like(hi0)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum(score >= mid)
+        # keep the invariant count(lo) >= k
+        lo, hi = jnp.where(count >= k, mid, lo), jnp.where(count >= k, hi, mid)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
+    # count(score >= lo) >= k; possibly > k on ties / unconverged bisection.
+    return (score >= lo).astype(score.dtype)
+
+
+def fixed_k_payload(
+    score: jax.Array, values: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Return the fixed-size sparse payload ``(vals[k], idx[k])``.
+
+    Selection is by ``score``; the payload carries ``values`` (which in
+    RegTop-k differ from the score: the *accumulated gradient* is sent, the
+    regularized score only ranks). Static ``k`` → static shapes for
+    ``all_gather`` over the data-parallel axes.
+    """
+    if score.ndim != 1:
+        raise ValueError(f"score must be 1-D, got {score.shape}")
+    k = int(k)
+    _, idx = jax.lax.top_k(score, k)
+    return values[idx], idx
+
+
+def mask_to_payload(
+    mask: jax.Array, values: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Convert a ~k-cardinality mask into an exactly-k payload.
+
+    Ranks masked entries by |value| (unmasked entries rank -inf); if the
+    mask has fewer than ``k`` entries the payload is padded with (0, 0)
+    pairs, which are no-ops under scatter-add aggregation.
+    """
+    ranked = jnp.where(mask > 0, jnp.abs(values), -jnp.inf)
+    _, idx = jax.lax.top_k(ranked, int(k))
+    vals = values[idx] * (mask[idx] > 0)
+    idx = jnp.where(mask[idx] > 0, idx, 0)
+    return vals, idx
+
+
+SELECTORS = {
+    "exact": exact_topk_mask,
+    "threshold": threshold_topk_mask,
+}
+
+
+def get_selector(name: str):
+    try:
+        return SELECTORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown selector {name!r}; available: {sorted(SELECTORS)}"
+        ) from None
+
+
+def sparsity_to_k(length: int, sparsity: float) -> int:
+    """Paper's S = k/J; returns k = ceil(S * J), clipped to [1, J]."""
+    k = int(-(-sparsity * length // 1))  # ceil
+    return max(1, min(length, k))

@@ -1,0 +1,272 @@
+"""Gradient sparsification algorithms (the paper's core contribution).
+
+Implements, over flat 1-D gradient vectors:
+
+* ``NoneSparsifier``      — identity (the paper's "no sparsification" line).
+* ``TopK``                — Algorithm 1 (error accumulation + magnitude top-k).
+* ``RegTopK``             — Algorithm 2, the paper's contribution: Bayesian
+  MAP selection with the Top-k prior and the asymptotic likelihood
+  ``u_mu(|1 + Delta|)``; selection metric
+  ``|a|^y * tanh(|1 + Delta| / mu)`` with unsent coordinates assigned
+  distortion ``Q -> inf`` (regularizer ``C = tanh(Q) = 1``).
+* ``HardThreshold``       — the total-error-minimizing baseline of
+  Sahu et al., NeurIPS'21 [27]: ``mask = |a| >= lam`` (variable k).
+
+All sparsifiers share one functional interface::
+
+    state            = sparsifier.init(length)                 # per worker
+    ghat, sel, state = sparsifier.step(state, g_local, g_agg_prev)
+    # ... server aggregates ghat across workers into g_agg ...
+
+``g_agg_prev`` is the previous round's *aggregated* gradient (known to all
+workers — it is what the server broadcast), required by RegTop-k's posterior
+distortion. Error accumulation, mask memory and step count live in
+``state`` (a pytree of arrays → shardable, checkpointable, vmappable over a
+leading worker axis).
+
+The math follows the paper exactly; see each class's docstring for the
+equation mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selectors as sel_lib
+
+
+class SparsifierState(NamedTuple):
+    """Per-worker persistent state (all shapes ``[L]`` except ``t``).
+
+    eps     — sparsification error  (paper's eps_n^t);   zeros for stateless.
+    a_prev  — previous accumulated gradient a_n^{t-1}    (RegTop-k only).
+    s_prev  — previous mask s_n^{t-1} in {0,1}           (RegTop-k only).
+    t       — round counter; t == 0 applies plain Top-k (Alg. 2 line 2).
+    """
+
+    eps: jax.Array
+    a_prev: jax.Array
+    s_prev: jax.Array
+    t: jax.Array
+
+
+def _init_state(length: int, dtype=jnp.float32) -> SparsifierState:
+    z = jnp.zeros((length,), dtype)
+    return SparsifierState(eps=z, a_prev=z, s_prev=z, t=jnp.zeros((), jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsifierConfig:
+    """Config shared by the registry; unused fields are ignored per-kind.
+
+    kind       — "none" | "topk" | "regtopk" | "hard_threshold"
+    sparsity   — S = k/J (paper's sparsification factor)
+    mu         — RegTop-k innovation-CDF scale (paper's mu; mu->0 == Top-k)
+    y          — prior exponent |a|^y (paper Remark 4; default 1.0)
+    q_const    — the "very large constant Q" for unsent coordinates
+    omega      — this worker's aggregation weight omega_n
+    selector   — "exact" (lax.top_k) | "threshold" (bisection; ~k mask)
+    threshold  — hard-threshold lambda (hard_threshold kind only)
+    score_fn   — optional override of the scoring function (fused Pallas
+                 kernel plugs in here; must match RegTopK._score).
+    """
+
+    kind: str = "regtopk"
+    sparsity: float = 0.01
+    mu: float = 1.0
+    y: float = 1.0
+    q_const: float = 1e9
+    omega: float = 1.0
+    selector: str = "exact"
+    threshold: float = 1e-3
+    score_fn: Optional[object] = None
+
+
+class Sparsifier:
+    """Base: error-accumulating sparsifier skeleton (Algorithm 1 shape)."""
+
+    def __init__(self, cfg: SparsifierConfig):
+        self.cfg = cfg
+
+    # -- interface ---------------------------------------------------------
+    def init(self, length: int, dtype=jnp.float32) -> SparsifierState:
+        return _init_state(length, dtype)
+
+    def step(
+        self,
+        state: SparsifierState,
+        g_local: jax.Array,
+        g_agg_prev: jax.Array,
+    ) -> Tuple[jax.Array, jax.Array, SparsifierState]:
+        """Returns (ghat_dense, mask, new_state)."""
+        raise NotImplementedError
+
+    # -- shared helpers ----------------------------------------------------
+    def _k(self, length: int) -> int:
+        return sel_lib.sparsity_to_k(length, self.cfg.sparsity)
+
+    def _select(self, score: jax.Array) -> jax.Array:
+        select = sel_lib.get_selector(self.cfg.selector)
+        return select(score, self._k(score.shape[0]))
+
+    def _finish(
+        self, state: SparsifierState, a: jax.Array, mask: jax.Array
+    ) -> Tuple[jax.Array, jax.Array, SparsifierState]:
+        ghat = mask * a
+        new_state = SparsifierState(
+            eps=a - ghat, a_prev=a, s_prev=mask, t=state.t + 1
+        )
+        return ghat, mask, new_state
+
+
+class NoneSparsifier(Sparsifier):
+    """Identity compressor — distributed SGD without sparsification."""
+
+    def step(self, state, g_local, g_agg_prev):
+        mask = jnp.ones_like(g_local)
+        return g_local, mask, state._replace(t=state.t + 1)
+
+
+class TopK(Sparsifier):
+    """Paper Algorithm 1: a = eps + g; mask = Top_k(|a|); eps' = a - mask*a."""
+
+    def step(self, state, g_local, g_agg_prev):
+        a = state.eps + g_local
+        mask = self._select(jnp.abs(a))
+        return self._finish(state, a, mask)
+
+
+class RegTopK(Sparsifier):
+    """Paper Algorithm 2 (RegTop-k).
+
+    Line 8:  Delta = s_prev * (g_agg_prev - omega * a_prev) / (omega * a)
+                     + Q * (1 - s_prev)
+    Line 9:  mask  = Top_k( a * tanh(|1 + Delta| / mu) )  — magnitude select,
+             generalized with the Remark-4 prior exponent ``y``:
+             score = |a|^y * tanh(|1 + Delta| / mu).
+    Round 0 applies plain Top-k (no posterior information yet).
+    """
+
+    def _score(
+        self, state: SparsifierState, a: jax.Array, g_prev: jax.Array
+    ) -> jax.Array:
+        cfg = self.cfg
+        if cfg.score_fn is not None:
+            return cfg.score_fn(a, state.a_prev, state.s_prev, g_prev, cfg)
+        denom = cfg.omega * a
+        safe = jnp.where(denom == 0, 1.0, denom)
+        delta_sent = (g_prev - cfg.omega * state.a_prev) / safe
+        delta = jnp.where(state.s_prev > 0, delta_sent, cfg.q_const)
+        reg = jnp.tanh(jnp.abs(1.0 + delta) / cfg.mu)
+        mag = jnp.abs(a)
+        if cfg.y != 1.0:
+            mag = mag**cfg.y
+        return mag * reg
+
+    def step(self, state, g_local, g_agg_prev):
+        a = state.eps + g_local
+        score = jnp.where(
+            state.t == 0, jnp.abs(a), self._score(state, a, g_agg_prev)
+        )
+        mask = self._select(score)
+        return self._finish(state, a, mask)
+
+
+class HardThreshold(Sparsifier):
+    """Sahu et al. [27]: fixed threshold lambda on the accumulated gradient.
+
+    Variable cardinality → dense-aggregation simulation only (a fixed-k
+    payload variant is available through ``selectors.mask_to_payload``).
+    """
+
+    def step(self, state, g_local, g_agg_prev):
+        a = state.eps + g_local
+        mask = (jnp.abs(a) >= self.cfg.threshold).astype(a.dtype)
+        return self._finish(state, a, mask)
+
+
+class CoordTopK(Sparsifier):
+    """Beyond-paper: *common-information coordinated* Top-k (ours).
+
+    The paper's analysis (Sec. B.3 + our Sec. 5 diagnosis in EXPERIMENTS.md)
+    shows RegTop-k's gains come from *implicit mask coordination*: when all
+    workers select the same coordinates, the destructive components of
+    heterogeneous local gradients cancel exactly and the error release is a
+    sum of past *true* aggregates. We make that explicit: the mask is a
+    deterministic function of information every worker shares — the
+    broadcast aggregated gradient ``g^{t-1}`` and the (therefore common)
+    previous masks — so coordination is guaranteed, not emergent.
+
+    score[j] = staleness[j] + |g_prev[j]| / max|g_prev|
+
+    Staleness (rounds since last selected, >= 1 for unselected) dominates →
+    round-robin coverage of every coordinate; the normalized aggregate
+    magnitude (< 1) breaks ties by global importance — the paper's
+    "statistical global Top-k" realized with exact worker agreement.
+    Converges at *every* sparsity in distributed linear regression where
+    Top-k plateaus (see EXPERIMENTS.md §Claims).
+    """
+
+    def step(self, state, g_local, g_agg_prev):
+        a = state.eps + g_local
+        # a_prev slot stores the (common) staleness counter
+        stale = state.a_prev
+        gmag = jnp.abs(g_agg_prev)
+        gn = gmag / jnp.maximum(jnp.max(gmag), 1e-30)
+        mask = self._select(stale + gn)
+        ghat = mask * a
+        new_state = SparsifierState(
+            eps=a - ghat,
+            a_prev=jnp.where(mask > 0, 0.0, stale + 1.0),
+            s_prev=mask,
+            t=state.t + 1,
+        )
+        return ghat, mask, new_state
+
+
+class DGC(Sparsifier):
+    """Deep Gradient Compression (Lin et al., ICLR'18 [26]) — Top-k with
+    *momentum correction* and momentum-factor masking. Included as the
+    strongest classical baseline the paper cites.
+
+    u = m·u + g;  v = v_residual + u;  mask = Top_k(|v|)
+    send mask·v;  v_residual = v − mask·v;  u = (1 − mask)·u
+    """
+
+    momentum: float = 0.9
+
+    def step(self, state, g_local, g_agg_prev):
+        u = self.momentum * state.a_prev + g_local  # a_prev slot holds u
+        v = state.eps + u
+        mask = self._select(jnp.abs(v))
+        ghat = mask * v
+        new_state = SparsifierState(
+            eps=v - ghat,
+            a_prev=(1.0 - mask) * u,
+            s_prev=mask,
+            t=state.t + 1,
+        )
+        return ghat, mask, new_state
+
+
+KINDS = {
+    "none": NoneSparsifier,
+    "topk": TopK,
+    "regtopk": RegTopK,
+    "hard_threshold": HardThreshold,
+    "coordtopk": CoordTopK,
+    "dgc": DGC,
+}
+
+
+def make_sparsifier(cfg: SparsifierConfig) -> Sparsifier:
+    try:
+        cls = KINDS[cfg.kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown sparsifier kind {cfg.kind!r}; available: {sorted(KINDS)}"
+        ) from None
+    return cls(cfg)

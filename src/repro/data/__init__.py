@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipelines (offline container)."""
+from repro.data.pipeline import LinRegDataset, TokenPipeline, make_linreg
+
+__all__ = ["LinRegDataset", "TokenPipeline", "make_linreg"]

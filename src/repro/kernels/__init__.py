@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the sparsification hot spots.
+
+* ``regtopk_score``  — fused Alg.2 selection metric (memory-bound chain)
+* ``threshold_topk`` — sort-free top-k via streaming count bisection
+* ``block_topk``     — per-tile top-m candidates for hierarchical top-k
+
+``ops`` holds the jit'd public wrappers (auto interpret-mode off-TPU);
+``ref`` the pure-jnp oracles every kernel is allclose-tested against.
+"""
+from repro.kernels import block_topk, ops, ref, regtopk_score, threshold_topk  # noqa: F401

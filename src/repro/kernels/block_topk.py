@@ -1,0 +1,74 @@
+"""Per-block top-m candidate extraction (Pallas TPU).
+
+Hierarchical top-k: each (8, 1024) tile emits its top-m candidates
+(values + flat indices) by m rounds of masked max — VPU-only, no sort.
+The host then runs exact top-k over the (rows/8)*m candidates, a ~1000x
+smaller problem. Exact whenever every tile contributes <= m winners
+(guaranteed for k <= m; overwhelmingly likely for uniform-ish score mass),
+and the selection-quality benchmark quantifies the miss rate otherwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024
+SUBLANES = 8
+BLOCK = (SUBLANES, LANES)
+
+
+def _block_topm_kernel(score_ref, vals_ref, idx_ref, *, m):
+    i = pl.program_id(0)
+    s = score_ref[...].astype(jnp.float32)  # [8, 1024]
+    rowi = jax.lax.broadcasted_iota(jnp.int32, BLOCK, 0)
+    colj = jax.lax.broadcasted_iota(jnp.int32, BLOCK, 1)
+    flat = (i * SUBLANES + rowi) * LANES + colj  # global flat index
+    for r in range(m):  # static tiny unroll
+        cur = jnp.max(s)
+        ismax = s == cur
+        # first-match tie break: lowest flat index among maxima
+        cand_idx = jnp.min(jnp.where(ismax, flat, jnp.iinfo(jnp.int32).max))
+        vals_ref[0, r] = cur
+        idx_ref[0, r] = cand_idx
+        s = jnp.where(flat == cand_idx, -jnp.inf, s)
+
+
+def block_topk_candidates(
+    score: jax.Array, m: int = 8, *, interpret: bool = False
+) -> Tuple[jax.Array, jax.Array]:
+    """score [rows, 1024] -> (vals [rows//8, m], flat idx [rows//8, m])."""
+    rows, lanes = score.shape
+    nblk = rows // SUBLANES
+    grid = (nblk,)
+    kernel = functools.partial(_block_topm_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(BLOCK, lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nblk, m), jnp.float32),
+            jax.ShapeDtypeStruct((nblk, m), jnp.int32),
+        ),
+        interpret=interpret,
+    )(score)
+
+
+def hierarchical_topk(
+    score: jax.Array, k: int, m: int = 8, *, interpret: bool = False
+) -> Tuple[jax.Array, jax.Array]:
+    """Approximate global top-k from per-block candidates.
+
+    Returns (vals [k], flat_idx [k]) sorted descending by value.
+    """
+    vals, idx = block_topk_candidates(score, m=m, interpret=interpret)
+    fv, fi = vals.reshape(-1), idx.reshape(-1)
+    top_v, pos = jax.lax.top_k(fv, k)
+    return top_v, fi[pos]

@@ -1,0 +1,65 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles the layout contract (flatten → pad → [rows, 1024] tiles) and
+selects interpret mode automatically off-TPU, so the same call sites run
+on CPU (validation) and TPU (deployment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_topk as _bt
+from repro.kernels import regtopk_score as _rs
+from repro.kernels import threshold_topk as _tt
+
+LANES = _rs.LANES
+SUBLANES = _rs.SUBLANES
+TILE = LANES * SUBLANES
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _tile(x: jax.Array) -> Tuple[jax.Array, int]:
+    """Flatten + zero-pad to [rows, LANES] with rows % 8 == 0."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "mu", "q", "interpret"))
+def regtopk_score(a, a_prev, s_prev, g_prev, *, omega, mu, q=1e9, interpret=None):
+    """Fused Alg.2 score over an arbitrary-shape gradient tensor."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    at, n = _tile(a.astype(jnp.float32))
+    pt, _ = _tile(a_prev.astype(jnp.float32))
+    st, _ = _tile(s_prev.astype(jnp.float32))
+    gt, _ = _tile(g_prev.astype(jnp.float32))
+    out = _rs.regtopk_score(
+        at, pt, st, gt, omega=omega, mu=mu, q=q, interpret=interp
+    )
+    return out.reshape(-1)[:n].reshape(a.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_iters", "interpret"))
+def threshold_topk_mask(score, k: int, *, n_iters=24, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    st, n = _tile(score.astype(jnp.float32))
+    mask = _tt.threshold_topk_mask(st, k, n_iters=n_iters, interpret=interp)
+    return mask.reshape(-1)[:n].reshape(score.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "m", "interpret"))
+def hierarchical_topk(score, k: int, m: int = 8, *, interpret=None):
+    """(vals [k], flat idx [k]) — per-block candidates + exact reduce."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    st, n = _tile(score.astype(jnp.float32))
+    return _bt.hierarchical_topk(st, k, m=m, interpret=interp)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def regtopk_score_ref(a, a_prev, s_prev, g_prev, *, omega, mu, q=1e9):
+    denom = omega * a
+    safe = jnp.where(denom == 0.0, 1.0, denom)
+    delta_sent = (g_prev - omega * a_prev) / safe
+    delta = jnp.where(s_prev > 0.0, delta_sent, q)
+    return jnp.abs(a) * jnp.tanh(jnp.abs(1.0 + delta) / mu)
+
+
+def count_above_ref(score, tau):
+    return jnp.sum((score >= tau).astype(jnp.int32))
+
+
+def global_max_ref(score):
+    return jnp.max(score)
+
+
+def threshold_topk_mask_ref(score, k, n_iters=24):
+    hi0 = jnp.max(score)
+    lo0 = jnp.zeros_like(hi0)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        ok = jnp.sum(score >= mid) >= k
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
+    return (score >= lo).astype(score.dtype)
+
+
+def block_topk_candidates_ref(score, m=8) -> Tuple[jax.Array, jax.Array]:
+    rows, lanes = score.shape
+    nblk = rows // 8
+    s = score.reshape(nblk, 8 * lanes).astype(jnp.float32)
+    vals, local = jax.lax.top_k(s, m)  # ties: lowest index first (stable)
+    base = (jnp.arange(nblk) * 8 * lanes)[:, None]
+    return vals, (base + local).astype(jnp.int32)

@@ -1,0 +1,69 @@
+"""Fused RegTop-k score kernel (Pallas TPU).
+
+The selection metric (paper Alg. 2 lines 8–9)
+
+    Delta = s_prev * (g_prev - omega * a_prev) / (omega * a) + Q (1 - s_prev)
+    score = |a| * tanh(|1 + Delta| / mu)
+
+is a 4-input elementwise chain over the J-sized gradient — purely
+memory-bound. Unfused, XLA:CPU-style execution would stream ~9 J-sized
+intermediates through HBM; this kernel makes one pass: 4 reads + 1 write
+per element, VMEM-tiled in (8, 1024) float32 blocks (8x128-lane aligned).
+
+Layout contract: callers flatten the gradient to [rows, 1024] (padding the
+tail with zeros — zero ``a`` scores zero, so padding never wins selection).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024
+SUBLANES = 8
+BLOCK = (SUBLANES, LANES)
+
+
+def _score_kernel(a_ref, a_prev_ref, s_prev_ref, g_prev_ref, out_ref, *, omega, mu, q):
+    a = a_ref[...]
+    a_prev = a_prev_ref[...]
+    s_prev = s_prev_ref[...]
+    g_prev = g_prev_ref[...]
+    denom = omega * a
+    safe = jnp.where(denom == 0.0, 1.0, denom)
+    delta_sent = (g_prev - omega * a_prev) / safe
+    delta = jnp.where(s_prev > 0.0, delta_sent, q)
+    reg = jnp.tanh(jnp.abs(1.0 + delta) / mu)
+    out_ref[...] = jnp.abs(a) * reg
+
+
+def regtopk_score(
+    a: jax.Array,
+    a_prev: jax.Array,
+    s_prev: jax.Array,
+    g_prev: jax.Array,
+    *,
+    omega: float,
+    mu: float,
+    q: float = 1e9,
+    interpret: bool = False,
+) -> jax.Array:
+    """All inputs [rows, 1024] float32; returns the score, same shape."""
+    rows, lanes = a.shape
+    if lanes != LANES:
+        raise ValueError(f"expected lane dim {LANES}, got {lanes}")
+    if rows % SUBLANES:
+        raise ValueError(f"rows must be a multiple of {SUBLANES}")
+    grid = (rows // SUBLANES,)
+    spec = pl.BlockSpec(BLOCK, lambda i: (i, 0))
+    kernel = functools.partial(_score_kernel, omega=omega, mu=mu, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), a.dtype),
+        interpret=interpret,
+    )(a, a_prev, s_prev, g_prev)

@@ -1,0 +1,400 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before ANY jax import: jax locks the device
+# count at first init. 512 host devices back the 16x16 and 2x16x16 meshes.
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfglib
+from repro.core.distributed import DistConfig, assemble, shapes_and_axes
+from repro.core.sparsify import SparsifierConfig
+from repro.launch import mesh as meshlib
+from repro.models import get_family, input_specs
+from repro.nn import sharding as shlib
+from repro.optim import OptConfig
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "benchmarks", "artifacts")
+
+# per-arch microbatch counts for train_4k (activation-memory control;
+# values chosen by the §Perf memory iteration — see EXPERIMENTS.md)
+MICROBATCHES = {
+    "whisper-tiny": 8,
+    "qwen2.5-3b": 4,
+    "internvl2-1b": 8,
+    "mamba2-780m": 2,
+    "chatglm3-6b": 4,
+    "zamba2-7b": 4,
+    "mixtral-8x7b": 8,
+    "deepseek-moe-16b": 8,
+    "granite-3-8b": 4,
+    "granite-3-8b-swa": 4,
+    "phi3-medium-14b": 16,
+    "paper-resnet-proxy": 1,
+}
+# eps/state dtype: bf16 for the param-heavy archs (memory-bound; DESIGN.md)
+STATE_DTYPE = {
+    "mixtral-8x7b": "bfloat16",
+    "phi3-medium-14b": "bfloat16",
+    "zamba2-7b": "bfloat16",
+    "chatglm3-6b": "bfloat16",
+    "granite-3-8b": "bfloat16",
+    "granite-3-8b-swa": "bfloat16",
+    "deepseek-moe-16b": "bfloat16",
+}
+ATTN_BLOCK = {"phi3-medium-14b": 512}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:[a-z0-9]+\[[^\]]*\](?:,\s*)?)+|\([^)]*\))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Sum result bytes of every collective op in the (post-SPMD) HLO."""
+    out: Dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo):
+        shapes, kind = m.group(1), m.group(2)
+        total = 0
+        for sm in SHAPE_RE.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * DTYPE_BYTES.get(dt, 4)
+        out[kind] = out.get(kind, 0) + total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def arch_dist_config(arch: str, mesh, *, sparsity=0.001, aggregation="sparse_allgather",
+                     kind="regtopk") -> DistConfig:
+    big = arch in STATE_DTYPE  # the param-heavy archs
+    return DistConfig(
+        sparsifier=SparsifierConfig(kind=kind, sparsity=sparsity, mu=1.0),
+        optimizer=OptConfig(
+            kind="adam",
+            learning_rate=1e-4,
+            moment_dtype="bfloat16" if big else "float32",
+        ),
+        aggregation=aggregation,
+        microbatches=MICROBATCHES.get(arch, 4),
+        dp_axes=meshlib.dp_axes_of(mesh),
+        state_dtype=STATE_DTYPE.get(arch, "float32"),
+    )
+
+
+def zero1_specs(params_shape, param_specs, mesh, dp_axes):
+    """ZeRO-1: additionally shard optimizer moments over the dp axes on the
+    first dimension not already sharded and divisible by the dp size."""
+    dp = tuple(dp_axes)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def mk(shape_leaf, spec):
+        dims = shape_leaf.shape
+        taken = set()
+        for e in spec:
+            if e is None:
+                continue
+            for a in (e if isinstance(e, tuple) else (e,)):
+                taken.add(a)
+        if any(a in taken for a in dp):
+            return spec
+        entries = list(spec) + [None] * (len(dims) - len(spec))
+        for i, (d, e) in enumerate(zip(dims, entries)):
+            if e is None and d % dp_size == 0 and d >= dp_size:
+                entries[i] = dp_entry
+                return P(*entries)
+        return spec
+
+    return jax.tree.map(mk, params_shape, param_specs)
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+CFG_OVERRIDES: Dict[str, Any] = {}
+
+
+def _apply_overrides(cfg):
+    if CFG_OVERRIDES:
+        kw = {}
+        for k, v in CFG_OVERRIDES.items():
+            cur = getattr(cfg, k)
+            if isinstance(cur, bool):
+                v = v in ("1", "true", "True")
+            elif isinstance(cur, int) or (cur is None and v.isdigit()):
+                v = int(v)
+            elif isinstance(cur, float):
+                v = float(v)
+            kw[k] = v
+        cfg = cfg.replace(**kw)
+    return cfg
+
+
+def lower_train(arch: str, shape_name: str, mesh, dist: Optional[DistConfig] = None):
+    cfg = cfglib.get_config(arch).replace(dtype="bfloat16")
+    if arch in ATTN_BLOCK:
+        cfg = cfg.replace(attn_block=ATTN_BLOCK[arch])
+    cfg = _apply_overrides(cfg)
+    seq, global_batch, _ = cfglib.INPUT_SHAPES[shape_name]
+    mod = get_family(cfg)
+    dist = dist or arch_dist_config(arch, mesh)
+    W = int(np.prod([mesh.shape[a] for a in dist.dp_axes]))
+    per_worker = max(1, global_batch // W)
+    if dist.microbatches > per_worker:
+        dist = __import__("dataclasses").replace(
+            dist, microbatches=per_worker
+        )
+    asm = assemble(mod, cfg, dist, mesh)
+    dp = tuple(dist.dp_axes)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+
+    batch_specs = input_specs(cfg, global_batch, seq, kind="train")
+    batch_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(dp_spec)), batch_specs
+    )
+    from repro.optim import make_optimizer
+
+    opt_shape = jax.eval_shape(
+        lambda p: make_optimizer(dist.optimizer).init(p), asm.params_shape
+    )
+    # moments shard like params + ZeRO-1 over dp where divisible
+    mom_specs = zero1_specs(asm.params_shape, asm.param_specs, mesh, dist.dp_axes)
+    opt_specs = {
+        "step": P(),
+        **{k: mom_specs for k in opt_shape if k != "step"},
+    }
+    in_shardings = (
+        _shardings(asm.param_specs, mesh),
+        _shardings(opt_specs, mesh),
+        _shardings(asm.state_specs, mesh),
+        batch_shardings,
+    )
+    with mesh:
+        lowered = jax.jit(
+            asm.train_step,
+            in_shardings=in_shardings,
+            out_shardings=(
+                in_shardings[0],
+                in_shardings[1],
+                in_shardings[2],
+                None,
+            ),
+            # params/opt/sparsifier state are consumed and re-emitted each
+            # step -> donation lets XLA reuse their buffers in place
+            # (the production trainer does the same).
+            donate_argnums=(0, 1, 2),
+        ).lower(asm.params_shape, opt_shape, asm.state_shapes, batch_specs)
+    return lowered, cfg
+
+
+def lower_serve(arch: str, shape_name: str, mesh):
+    cfg = cfglib.get_config(arch).replace(dtype="bfloat16")
+    cfg = _apply_overrides(cfg)
+    seq, global_batch, kind = cfglib.INPUT_SHAPES[shape_name]
+    mod = get_family(cfg)
+    dp = meshlib.dp_axes_of(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    M = mesh.shape["model"]
+
+    params_shape, axes = shapes_and_axes(mod, cfg)
+    # serve rules: shard kv heads if divisible, else shard the cache seq
+    rules = dict()
+    if cfg.n_heads and cfg.n_kv_heads % M == 0:
+        rules["kv_seq"] = None
+    else:
+        rules["kv_seq"] = "model"
+        rules["kv_heads"] = None
+    param_specs = shlib.tree_specs(params_shape, axes, mesh, rules=rules,
+                                   dp_axes=dp)
+
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    b_spec = dp_spec if global_batch % dp_total == 0 else None
+    if kind == "prefill":
+        batch_specs = input_specs(cfg, global_batch, seq, kind="train")
+        batch_specs.pop("labels")
+        batch_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(b_spec)), batch_specs
+        )
+
+        def serve_step(params, batch):
+            return mod.prefill(params, cfg, batch)
+
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(_shardings(param_specs, mesh), batch_shardings),
+            ).lower(params_shape, batch_specs)
+        return lowered, cfg
+
+    # decode: ONE new token against a seq-length cache
+    cache_shape = jax.eval_shape(
+        lambda: mod.init_cache(cfg, global_batch, seq)
+    )
+    cache_ax = mod.cache_axes(cfg)
+    cache_specs = shlib.tree_specs(cache_shape, cache_ax, mesh, rules=rules,
+                                   dp_axes=dp)
+    tok_specs = input_specs(cfg, global_batch, seq, kind="decode")
+
+    def serve_step(params, cache, tokens):
+        return mod.decode_step(params, cfg, cache, tokens)
+
+    with mesh:
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(
+                _shardings(param_specs, mesh),
+                _shardings(cache_specs, mesh),
+                NamedSharding(mesh, P(b_spec)),
+            ),
+        ).lower(params_shape, cache_shape, tok_specs["tokens"])
+    return lowered, cfg
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool,
+              dist: Optional[DistConfig] = None, tag: str = "") -> Dict[str, Any]:
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    _, _, kind = cfglib.INPUT_SHAPES[shape_name]
+    t0 = time.time()
+    if kind == "train":
+        lowered, cfg = lower_train(arch, shape_name, mesh, dist)
+    else:
+        lowered, cfg = lower_serve(arch, shape_name, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    from repro.launch import hlo_cost
+
+    walk = hlo_cost.analyze(compiled.as_text())
+    colls = walk["collective_bytes"]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "tag": tag,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "mem": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "flops": walk["flops"],
+        "hbm_bytes": walk["hbm_bytes"],
+        "xla_flops_looponce": cost.get("flops") if cost else None,
+        "collective_bytes": colls,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--aggregation", default="sparse_allgather")
+    ap.add_argument("--sparsifier", default="regtopk")
+    ap.add_argument("--sparsity", type=float, default=0.001)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--cfg", action="append", default=[],
+                    help="model-config override key=value (repeatable)")
+    args = ap.parse_args()
+    for item in args.cfg:
+        k, v = item.split("=", 1)
+        CFG_OVERRIDES[k] = v
+
+    archs = (
+        [a for a in cfglib.ARCHS if a != "paper-resnet-proxy"]
+        if args.arch == "all"
+        else [args.arch]
+    )
+    shapes = (
+        list(cfglib.INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    )
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    out_path = args.out or os.path.join(
+        os.path.abspath(ARTIFACT), "dryrun.jsonl"
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+
+    done = set()
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"], r.get("tag", "")))
+                except Exception:
+                    pass
+
+    n_fail = 0
+    for multi in meshes:
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                if not cfglib.shape_applicable(arch, shape):
+                    print(f"SKIP  {arch} x {shape} (see DESIGN.md)", flush=True)
+                    continue
+                if (arch, shape, mesh_name, args.tag) in done:
+                    print(f"CACHED {arch} x {shape} x {mesh_name}", flush=True)
+                    continue
+                try:
+                    dist = None
+                    if args.tag:
+                        m = meshlib.make_production_mesh(multi_pod=multi)
+                        dist = arch_dist_config(
+                            arch, m, sparsity=args.sparsity,
+                            aggregation=args.aggregation, kind=args.sparsifier,
+                        )
+                    rec = run_combo(
+                        arch, shape, multi_pod=multi, dist=dist, tag=args.tag
+                    )
+                    with open(out_path, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                    print(
+                        f"OK    {arch} x {shape} x {mesh_name}: "
+                        f"peak={rec['mem']['peak_bytes'] and rec['mem']['peak_bytes']/2**30:.2f}GiB "
+                        f"flops={rec['flops']:.3e} coll={rec['collective_bytes']['total']:.3e}B "
+                        f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                        flush=True,
+                    )
+                except Exception as e:
+                    n_fail += 1
+                    print(f"FAIL  {arch} x {shape} x {mesh_name}: {e}", flush=True)
+                    traceback.print_exc()
+    print(f"dry-run complete; {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts ``while`` bodies ONCE — useless for
+scan-over-layers models. This walker parses the HLO text, extracts each
+while loop's trip count from its condition computation (the `lt(iter,
+constant)` pattern lax.scan emits), and walks the call graph multiplying
+body costs by trip counts. It reports, per device:
+
+  * ``flops``            — dot/convolution MACs x2 (dominant terms)
+  * ``collective_bytes`` — per collective kind, result-shape bytes
+  * ``hbm_bytes``        — 2 x Σ materialized result bytes (read+write
+                           proxy; fusion internals excluded, as on TPU)
+
+Approximations are documented in EXPERIMENTS.md §Roofline (methodology).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "f8e4m3fn": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+    "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_CALL_REF = re.compile(
+    r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)"
+)
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND = re.compile(r"%?([\w.\-]+)")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "after-all", "partition-id",
+}
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(typestr: str) -> List[int]:
+    m = _SHAPE.search(typestr)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Op:
+    __slots__ = ("name", "type", "kind", "rest")
+
+    def __init__(self, name, type_, kind, rest):
+        self.name, self.type, self.kind, self.rest = name, type_, kind, rest
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        h = _COMP_HDR.match(line)
+        if h:
+            cur = h.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            comps[cur].append(Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _trip_count(cond_ops: List[Op]) -> int:
+    """Largest s32 scalar constant in the loop condition ~= trip count."""
+    best = 1
+    for op in cond_ops:
+        if op.kind == "constant" and op.type.strip().startswith("s32[]"):
+            m = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        m = _CONST_S32.search(op.type + " " + op.rest)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.type):
+        out_elems *= d
+    # contraction size from lhs operand shape + contracting dims
+    mc = _CONTRACT.search(op.rest)
+    k = 1
+    if mc:
+        ops = op.rest.split("),")[0]
+        first = _OPERAND.match(ops.strip().lstrip("("))
+        if first:
+            lhs_type = symtab.get(first.group(1), "")
+            dims = _shape_dims(lhs_type)
+            for ci in mc.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+class HloCost:
+    def __init__(self, hlo: str):
+        self.comps = parse_computations(hlo)
+        # entry = the computation named like ENTRY (first with ENTRY kept by
+        # regex order); fall back: computation not referenced by others.
+        referenced = set()
+        for ops in self.comps.values():
+            for op in ops:
+                for r in _CALL_REF.finditer(op.rest):
+                    referenced.add(r.group(1))
+                b = _BRANCHES.search(op.rest)
+                if b:
+                    for name in b.group(1).split(","):
+                        referenced.add(name.strip().lstrip("%"))
+        entries = [c for c in self.comps if c not in referenced]
+        self.entry = entries[-1] if entries else next(iter(self.comps))
+        self._memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def _comp_cost(self, name: str) -> Tuple[float, float, Dict[str, float]]:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = (0.0, 0.0, {})  # cycle guard
+        ops = self.comps.get(name, [])
+        symtab = {op.name: op.type for op in ops}
+        flops = 0.0
+        bytes_ = 0.0
+        colls: Dict[str, float] = {}
+        for op in ops:
+            if op.kind == "dot":
+                flops += _dot_flops(op, symtab)
+            elif op.kind == "convolution":
+                out = 1
+                for d in _shape_dims(op.type):
+                    out *= d
+                flops += 2.0 * out * 8  # depthwise K=4 approx (x2 MAC)
+            if op.kind in COLLECTIVES or any(
+                op.kind.startswith(c + "-") for c in COLLECTIVES
+            ):
+                base = op.kind
+                for c in COLLECTIVES:
+                    if op.kind.startswith(c):
+                        base = c
+                        break
+                b = _shape_bytes(op.type)
+                colls[base] = colls.get(base, 0.0) + b
+            if op.kind not in _SKIP_BYTES:
+                bytes_ += _shape_bytes(op.type)
+            # recurse into referenced computations
+            if op.kind == "while":
+                refs = dict(
+                    (m.group(0).split("=")[0], m.group(1))
+                    for m in _CALL_REF.finditer(op.rest)
+                )
+                body = cond = None
+                for m in _CALL_REF.finditer(op.rest):
+                    key = m.group(0).split("=")[0]
+                    if key == "body":
+                        body = m.group(1)
+                    elif key == "condition":
+                        cond = m.group(1)
+                trips = _trip_count(self.comps.get(cond, [])) if cond else 1
+                if body:
+                    bf, bb, bc = self._comp_cost(body)
+                    flops += trips * bf
+                    bytes_ += trips * bb
+                    for k, v in bc.items():
+                        colls[k] = colls.get(k, 0.0) + trips * v
+            elif op.kind == "conditional":
+                b = _BRANCHES.search(op.rest)
+                if b:
+                    branch_costs = [
+                        self._comp_cost(n.strip().lstrip("%"))
+                        for n in b.group(1).split(",")
+                    ]
+                    if branch_costs:
+                        bf = max(c[0] for c in branch_costs)
+                        bb = max(c[1] for c in branch_costs)
+                        flops += bf
+                        bytes_ += bb
+                        for c in branch_costs:
+                            for k, v in c[2].items():
+                                colls[k] = max(colls.get(k, 0.0), v)
+            else:
+                for m in _CALL_REF.finditer(op.rest):
+                    key = m.group(0).split("=")[0]
+                    if key in ("to_apply", "calls"):
+                        cf, cb, cc = self._comp_cost(m.group(1))
+                        flops += cf
+                        # fusion internals don't hit HBM; count calls only
+                        if op.kind != "fusion":
+                            bytes_ += cb
+                        for k, v in cc.items():
+                            colls[k] = colls.get(k, 0.0) + v
+        self._memo[name] = (flops, bytes_, colls)
+        return self._memo[name]
+
+    def analyze(self) -> Dict[str, object]:
+        flops, bytes_, colls = self._comp_cost(self.entry)
+        colls = dict(colls)
+        colls["total"] = sum(colls.values())
+        return {
+            "flops": flops,
+            "hbm_bytes": 2.0 * bytes_,
+            "collective_bytes": colls,
+        }
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    return HloCost(hlo).analyze()

@@ -1,0 +1,40 @@
+"""Production mesh construction (TPU v5e; 16x16 pod, 2-pod multi-pod).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required: smoke tests see 1 CPU device, only the
+dry-run forces 512 host devices via XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Degenerate mesh over however many devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh(
+        (data, model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def dp_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# Hardware constants (TPU v5e) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

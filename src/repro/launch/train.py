@@ -1,0 +1,118 @@
+"""Training launcher.
+
+CPU/dev:    PYTHONPATH=src python -m repro.launch.train --arch paper-resnet-proxy \
+                --steps 50 --global-batch 8 --seq 64
+Production: run under a TPU runtime where ``jax.devices()`` exposes the
+            16x16 (or 2x16x16 with --multi-pod) slice; the same flags apply
+            with --mesh production.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfglib
+from repro.checkpoint import restore, save
+from repro.core.distributed import (
+    DistConfig,
+    assemble,
+    init_sparsifier_state,
+)
+from repro.core.sparsify import SparsifierConfig
+from repro.data import TokenPipeline
+from repro.launch import mesh as meshlib
+from repro.models import get_family
+from repro.optim import OptConfig, make_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-resnet-proxy")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--sparsifier", default="regtopk",
+                    choices=["none", "topk", "regtopk", "cyclic"])
+    ap.add_argument("--sparsity", type=float, default=0.01)
+    ap.add_argument("--mu", type=float, default=1.0)
+    ap.add_argument("--aggregation", default="sparse_allgather")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="host", choices=["host", "production"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant of --arch")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = cfglib.get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke_variant()
+    if args.mesh == "production":
+        mesh = meshlib.make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = meshlib.make_host_mesh(model=args.model_parallel)
+    dp_axes = meshlib.dp_axes_of(mesh)
+    W = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    if args.global_batch % W:
+        raise SystemExit(f"--global-batch must be divisible by {W} workers")
+
+    dist = DistConfig(
+        sparsifier=SparsifierConfig(
+            kind=args.sparsifier, sparsity=args.sparsity, mu=args.mu
+        ),
+        optimizer=OptConfig(kind="adam", learning_rate=args.lr),
+        aggregation=args.aggregation,
+        microbatches=args.microbatches,
+        dp_axes=dp_axes,
+    )
+    mod = get_family(cfg)
+    asm = assemble(mod, cfg, dist, mesh)
+    params, _ = mod.init(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer(dist.optimizer)
+    opt_state = opt.init(params)
+    sp_state, _ = init_sparsifier_state(
+        asm.plan, W, mesh, dp_axes, jnp.float32
+    )
+    start = 0
+    if args.resume:
+        params = restore(args.resume + "/params", params)
+        opt_state = restore(args.resume + "/opt", opt_state)
+        sp_state = restore(args.resume + "/sparsifier", sp_state)
+        from repro.checkpoint.store import metadata
+
+        start = metadata(args.resume + "/params").get("step", 0)
+        print(f"resumed from step {start}")
+
+    pipe = TokenPipeline(cfg, args.global_batch, args.seq)
+    step_fn = jax.jit(asm.train_step)
+    t0 = time.time()
+    with mesh:
+        for t in range(start, start + args.steps):
+            params, opt_state, sp_state, m = step_fn(
+                params, opt_state, sp_state, pipe.batch_at(t)
+            )
+            if t % args.log_every == 0 or t == start + args.steps - 1:
+                dt = time.time() - t0
+                print(
+                    f"step {t:5d} loss {float(m['loss']):.4f} "
+                    f"({dt / max(1, t - start + 1):.2f}s/step)",
+                    flush=True,
+                )
+    if args.checkpoint:
+        save(args.checkpoint + "/params", params,
+             metadata={"step": start + args.steps})
+        save(args.checkpoint + "/opt", opt_state)
+        save(args.checkpoint + "/sparsifier", sp_state)
+        print(f"checkpointed to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model families: dense/MoE/VLM decoder LMs, enc-dec, SSM, hybrid."""
+from repro.models.config import ModelConfig
+from repro.models.registry import get_family, input_specs, make_batch
+
+__all__ = ["ModelConfig", "get_family", "input_specs", "make_batch"]

@@ -1,0 +1,276 @@
+"""Decoder-only transformer LM — dense GQA, MoE, and VLM-prefix variants.
+
+Covers assigned archs: qwen2.5-3b, chatglm3-6b, granite-3-8b,
+phi3-medium-14b (dense); mixtral-8x7b, deepseek-moe-16b (moe);
+internvl2-1b (vlm — language decoder consuming stub patch embeddings).
+
+Layer stack is scan-over-stacked-params (compile time independent of
+depth); attention is dense for training (remat at block level), chunked
+online-softmax for long prefill, and cache-based for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn import layers as L
+from repro.nn import moe as M
+
+Params = Dict[str, Any]
+
+
+def _norm(cfg: ModelConfig):
+    if cfg.norm == "rmsnorm":
+        return L.rmsnorm_init, functools.partial(L.rmsnorm, eps=cfg.norm_eps)
+    return L.layernorm_init, functools.partial(L.layernorm, eps=cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ninit, _ = _norm(cfg)
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_a = L.attn_init(
+        k1,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.hd,
+        qkv_bias=cfg.qkv_bias,
+        dtype=cfg.jdtype,
+        pad_to=cfg.pad_heads,
+    )
+    n1p, n1a = ninit(cfg.d_model, cfg.jdtype)
+    n2p, n2a = ninit(cfg.d_model, cfg.jdtype)
+    if cfg.is_moe:
+        mlp_p, mlp_a = M.moe_init(
+            k2,
+            cfg.d_model,
+            cfg.d_ff,
+            cfg.n_experts,
+            n_shared=cfg.n_shared_experts,
+            shared_d_ff=cfg.moe_shared_d_ff,
+            parallelism=cfg.moe_parallelism,
+            dtype=cfg.jdtype,
+        )
+    else:
+        mlp_p, mlp_a = L.mlp_init(
+            k2, cfg.d_model, cfg.d_ff, act=cfg.act, dtype=cfg.jdtype
+        )
+    p = {"attn": attn_p, "mlp": mlp_p, "norm1": n1p, "norm2": n2p}
+    a = {"attn": attn_a, "mlp": mlp_a, "norm1": n1a, "norm2": n2a}
+    return p, a
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    keys = jax.random.split(key, 4)
+    emb_p, emb_a = L.embed_init(
+        keys[0], cfg.padded_vocab, cfg.d_model, dtype=cfg.jdtype
+    )
+    lkeys = jax.random.split(keys[1], cfg.n_layers)
+    layers_p = jax.vmap(lambda k: _layer_init(k, cfg)[0])(lkeys)
+    _, layer_a = _layer_init(keys[1], cfg)
+    layers_a = jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax),
+        layer_a,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(i, (str, type(None))) for i in x),
+    )
+    ninit, _ = _norm(cfg)
+    fn_p, fn_a = ninit(cfg.d_model, cfg.jdtype)
+    p = {"embed": emb_p, "layers": layers_p, "final_norm": fn_p}
+    a = {"embed": emb_a, "layers": layers_a, "final_norm": fn_a}
+    if cfg.family == "vlm":
+        proj_p, proj_a = L.linear_init(
+            keys[2], cfg.vision_dim, cfg.d_model, None, "embed",
+            bias=True, dtype=cfg.jdtype,
+        )
+        p["vision_proj"] = proj_p
+        a["vision_proj"] = proj_a
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _block(
+    lp: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    mode: str,  # "dense" | "chunked"
+) -> Tuple[jax.Array, jax.Array]:
+    _, norm = _norm(cfg)
+    h = norm(lp["norm1"], x)
+    q, k, v = L.attn_qkv(lp["attn"], h)
+    q = L.rope(q, positions, base=cfg.rope_base, fraction=cfg.rope_fraction)
+    k = L.rope(k, positions, base=cfg.rope_base, fraction=cfg.rope_fraction)
+    if mode == "chunked":
+        ctx = L.attention_chunked(
+            q, k, v, causal=True, window=cfg.sliding_window,
+            block=cfg.attn_block,
+        )
+    else:
+        ctx = L.attention_dense(
+            q, k, v, causal=True, window=cfg.sliding_window
+        )
+    x = x + L.attn_out(lp["attn"], ctx)
+    h = norm(lp["norm2"], x)
+    if cfg.is_moe:
+        y, aux = M.moe_apply(
+            lp["mlp"], h, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor,
+            group_size=cfg.moe_group_size,
+            dispatch=cfg.moe_dispatch,
+        )
+    else:
+        y, aux = L.mlp(lp["mlp"], h, act=cfg.act), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _stack(params_layers, x, cfg: ModelConfig, positions, mode: str):
+    body = functools.partial(_block, cfg=cfg, positions=positions, mode=mode)
+
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = None
+
+    def scan_fn(carry, lp):
+        x, aux = carry
+        fn = jax.checkpoint(body, policy=policy) if cfg.remat else body
+        x, a = fn(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)), params_layers
+    )
+    return x, aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# training forward / loss
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x [B, S', E], positions [S'])."""
+    x = L.embed(params["embed"], batch["tokens"], cfg.jdtype)
+    if cfg.family == "vlm":
+        vis = L.linear(params["vision_proj"], batch["patches"].astype(cfg.jdtype))
+        x = jnp.concatenate([vis, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, batch, *, mode: str = "dense"):
+    """Logits over the token positions (VLM prefix stripped)."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    x, aux = _stack(params["layers"], x, cfg, positions, mode)
+    _, norm = _norm(cfg)
+    x = norm(params["final_norm"], x)
+    if cfg.family == "vlm":
+        x = x[:, -batch["tokens"].shape[1]:]
+    logits = L.unembed(params["embed"], x)
+    return logits, aux
+
+
+def mask_pad_logits(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Remove the vocab-padding rows from the softmax support."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    bad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+    return jnp.where(bad, jnp.asarray(L.NEG_INF, logits.dtype), logits)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, cfg, batch)
+    logits = mask_pad_logits(logits.astype(jnp.float32), cfg)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    loss = nll + cfg.aux_loss_coef * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+def cache_slots(cfg: ModelConfig, max_len: int) -> int:
+    """Sliding-window archs keep a ring buffer of ``window`` slots — this is
+    what makes long_500k decode feasible for mixtral (cache = 4096 slots,
+    not 524288)."""
+    if cfg.sliding_window:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    slots = cache_slots(cfg, max_len)
+    kv = jnp.zeros(
+        (cfg.n_layers, batch, slots, cfg.eff_kv_heads, cfg.hd), cfg.jdtype
+    )
+    return {"k": kv, "v": kv, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    ax = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": ax, "v": ax, "pos": ()}
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict, tokens: jax.Array):
+    """tokens [B, 1]; returns (logits [B, 1, V], new cache).
+
+    The KV cache is a ring buffer when sliding-window attention is on:
+    writes go to ``pos % slots`` and all filled slots attend (attention is
+    permutation-invariant over the KV set, and keys carry absolute RoPE)."""
+    x = L.embed(params["embed"], tokens, cfg.jdtype)
+    pos = cache["pos"]
+    slots = cache["k"].shape[2]
+    write_at = pos % slots if cfg.sliding_window else pos
+    filled = jnp.minimum(pos + 1, slots)
+    positions = pos[None, None] + jnp.zeros((1, 1), jnp.int32)
+    _, norm = _norm(cfg)
+
+    def body(carry, lp_and_cache):
+        x = carry
+        lp, kc, vc = lp_and_cache
+        h = norm(lp["norm1"], x)
+        q, k, v = L.attn_qkv(lp["attn"], h)
+        q = L.rope(q, positions, base=cfg.rope_base, fraction=cfg.rope_fraction)
+        k = L.rope(k, positions, base=cfg.rope_base, fraction=cfg.rope_fraction)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, write_at, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, write_at, axis=1)
+        ctx = L.attention_decode(q, kc, vc, filled, window=None)
+        x = x + L.attn_out(lp["attn"], ctx)
+        h = norm(lp["norm2"], x)
+        if cfg.is_moe:
+            y, _ = M.moe_apply(
+                lp["mlp"], h, top_k=cfg.moe_top_k,
+                capacity_factor=cfg.capacity_factor,
+                group_size=cfg.moe_group_size,
+                no_drop=True,  # serving never drops tokens
+            )
+        else:
+            y = L.mlp(lp["mlp"], h, act=cfg.act)
+        return x + y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = norm(params["final_norm"], x)
+    logits = mask_pad_logits(L.unembed(params["embed"], x), cfg)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Prefill logits (chunked attention; no cache materialization here —
+    the decode benchmarks build the cache via init_cache + dry-run specs)."""
+    logits, _ = forward(params, cfg, batch, mode="chunked")
+    return logits

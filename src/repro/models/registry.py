@@ -1,0 +1,82 @@
+"""Family dispatch + input specs (ShapeDtypeStruct stand-ins for dry-runs).
+
+Every family module exposes:
+    init(key, cfg) -> (params, logical_axes)
+    loss_fn(params, cfg, batch) -> (loss, metrics)
+    prefill(params, cfg, batch) -> logits
+    init_cache(cfg, batch, max_len) -> cache
+    cache_axes(cfg) -> logical axes for the cache
+    decode_step(params, cfg, cache, tokens) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from types import ModuleType
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm, ssm
+from repro.models.config import ModelConfig
+
+_FAMILIES: Dict[str, ModuleType] = {
+    "dense": lm,
+    "moe": lm,
+    "vlm": lm,
+    "encdec": encdec,
+    "ssm": ssm,
+    "hybrid": ssm,
+}
+
+
+def get_family(cfg: ModelConfig) -> ModuleType:
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(
+            f"unknown family {cfg.family!r}; available: {sorted(_FAMILIES)}"
+        ) from None
+
+
+def input_specs(
+    cfg: ModelConfig, batch: int, seq: int, *, kind: str = "train"
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    kind: "train" (tokens+labels+frontend stubs) or "decode" (one token).
+    """
+    i32 = jnp.int32
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), cfg.jdtype
+        )
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.vision_dim), cfg.jdtype
+        )
+    return specs
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key=None) -> Dict:
+    """Concrete synthetic batch matching ``input_specs`` (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    out = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.enc_seq, cfg.d_model), cfg.jdtype
+        )
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            ks[3], (batch, cfg.n_patches, cfg.vision_dim), cfg.jdtype
+        )
+    return out

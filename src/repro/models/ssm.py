@@ -1,0 +1,297 @@
+"""SSM and hybrid models: mamba2-780m (pure SSD) and zamba2-7b (hybrid).
+
+zamba2 structure (arXiv:2411.15242, adapted): n_layers total blocks; a
+single *shared* attention+MLP block (one parameter set) is applied every
+``attn_every`` blocks, mamba2 blocks elsewhere. We realize the 81-block
+stack as ``n_groups`` super-blocks of (attn_every-1 mamba + shared attn),
+plus trailing mamba blocks — scanned, so compile time stays depth-free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import mask_pad_logits
+from repro.nn import layers as L
+from repro.nn import ssd
+
+Params = Dict[str, Any]
+
+
+def _plan(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """Returns (n_groups, mamba_per_group, trailing_mamba)."""
+    if cfg.family != "hybrid":
+        return 0, 0, cfg.n_layers
+    per = cfg.attn_every  # group = (per-1) mamba + 1 shared attn
+    n_groups = cfg.n_layers // per
+    trailing = cfg.n_layers - n_groups * per
+    return n_groups, per - 1, trailing
+
+
+def _mamba_init(key, cfg: ModelConfig):
+    p, a = ssd.ssd_init(
+        key,
+        cfg.d_model,
+        d_inner=cfg.d_inner,
+        headdim=cfg.ssm_headdim,
+        d_state=cfg.ssm_state,
+        dtype=cfg.jdtype,
+    )
+    np_, na_ = L.rmsnorm_init(cfg.d_model, cfg.jdtype)
+    return {"mixer": p, "norm": np_}, {"mixer": a, "norm": na_}
+
+
+def _attn_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    ap, aa = L.attn_init(
+        k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype=cfg.jdtype
+    )
+    mp, ma = L.mlp_init(k2, cfg.d_model, cfg.d_ff, act=cfg.act, dtype=cfg.jdtype)
+    n1p, n1a = L.rmsnorm_init(cfg.d_model, cfg.jdtype)
+    n2p, n2a = L.rmsnorm_init(cfg.d_model, cfg.jdtype)
+    return (
+        {"attn": ap, "mlp": mp, "norm1": n1p, "norm2": n2p},
+        {"attn": aa, "mlp": ma, "norm1": n1a, "norm2": n2a},
+    )
+
+
+def _prep(axes_tree, name="layers"):
+    return jax.tree.map(
+        lambda ax: (name,) + tuple(ax),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 5)
+    emb_p, emb_a = L.embed_init(
+        ks[0], cfg.padded_vocab, cfg.d_model, dtype=cfg.jdtype
+    )
+    n_groups, per_group, trailing = _plan(cfg)
+    n_grouped = n_groups * per_group
+    p: Params = {"embed": emb_p}
+    a: Params = {"embed": emb_a}
+    _, m_a1 = _mamba_init(ks[1], cfg)
+    if n_grouped:
+        gkeys = jax.random.split(ks[1], n_grouped).reshape(
+            n_groups, per_group, 2
+        )
+        p["grouped"] = jax.vmap(
+            jax.vmap(lambda k: _mamba_init(k, cfg)[0])
+        )(gkeys)
+        a["grouped"] = _prep(_prep(m_a1, "blocks"), "layers")
+        sp, sa = _attn_block_init(ks[2], cfg)
+        p["shared_attn"] = sp
+        a["shared_attn"] = sa
+    if trailing:
+        tkeys = jax.random.split(ks[3], trailing)
+        p["trailing"] = jax.vmap(lambda k: _mamba_init(k, cfg)[0])(tkeys)
+        a["trailing"] = _prep(m_a1)
+    fn_p, fn_a = L.rmsnorm_init(cfg.d_model, cfg.jdtype)
+    p["final_norm"] = fn_p
+    a["final_norm"] = fn_a
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _mamba_block(lp, x, cfg: ModelConfig, cache=None):
+    h = L.rmsnorm(lp["norm"], x, eps=cfg.norm_eps)
+    y, new_cache = ssd.ssd_block_apply(
+        lp["mixer"],
+        h,
+        d_inner=cfg.d_inner,
+        headdim=cfg.ssm_headdim,
+        d_state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk,
+        cache=cache,
+        norm_eps=cfg.norm_eps,
+    )
+    return x + y, new_cache
+
+
+def _attn_block(lp, x, cfg: ModelConfig, positions, mode):
+    h = L.rmsnorm(lp["norm1"], x, eps=cfg.norm_eps)
+    q, k, v = L.attn_qkv(lp["attn"], h)
+    q = L.rope(q, positions, base=cfg.rope_base)
+    k = L.rope(k, positions, base=cfg.rope_base)
+    if mode == "chunked":
+        ctx = L.attention_chunked(q, k, v, causal=True, block=cfg.attn_block)
+    else:
+        ctx = L.attention_dense(q, k, v, causal=True)
+    x = x + L.attn_out(lp["attn"], ctx)
+    h = L.rmsnorm(lp["norm2"], x, eps=cfg.norm_eps)
+    return x + L.mlp(lp["mlp"], h, act=cfg.act)
+
+
+def forward(params, cfg: ModelConfig, batch, *, mode: str = "dense"):
+    x = L.embed(params["embed"], batch["tokens"], cfg.jdtype)
+    positions = jnp.arange(x.shape[1])
+    n_groups, per_group, trailing = _plan(cfg)
+
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat_policy == "dots"
+        else None
+    )
+    mb = functools.partial(_mamba_block, cfg=cfg)
+    mbr = (
+        jax.checkpoint(lambda lp, x: mb(lp, x)[0], policy=policy)
+        if cfg.remat
+        else (lambda lp, x: mb(lp, x)[0])
+    )
+
+    if n_groups:
+        shared = params["shared_attn"]
+
+        def group_body(x, gp):
+            x, _ = jax.lax.scan(lambda c, lp: (mbr(lp, c), None), x, gp)
+            ab = functools.partial(
+                _attn_block, cfg=cfg, positions=positions, mode=mode
+            )
+            fn = jax.checkpoint(ab, policy=policy) if cfg.remat else ab
+            return fn(shared, x), None
+
+        x, _ = jax.lax.scan(group_body, x, params["grouped"])
+    if trailing:
+        x, _ = jax.lax.scan(
+            lambda c, lp: (mbr(lp, c), None), x, params["trailing"]
+        )
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    return L.unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch)
+    logits = mask_pad_logits(logits.astype(jnp.float32), cfg)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    logits, _ = forward(params, cfg, batch, mode="chunked")
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    n_groups, per_group, trailing = _plan(cfg)
+    H = cfg.d_inner // cfg.ssm_headdim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+
+    def ssm_cache(n, *lead):
+        return {
+            "conv": jnp.zeros(
+                lead + (batch, ssd.CONV_K - 1, conv_dim), cfg.jdtype
+            ),
+            "ssm": jnp.zeros(
+                lead + (batch, H, cfg.ssm_headdim, cfg.ssm_state), cfg.jdtype
+            ),
+        }
+
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if n_groups:
+        cache["grouped"] = ssm_cache(None, n_groups, per_group)
+        kv = jnp.zeros(
+            (n_groups, batch, max_len, cfg.eff_kv_heads, cfg.hd), cfg.jdtype
+        )
+        cache["attn_k"] = kv
+        cache["attn_v"] = kv
+    if trailing:
+        cache["trailing"] = ssm_cache(None, trailing)
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    n_groups, per_group, trailing = _plan(cfg)
+    sax = {
+        "conv": ("batch", "conv", "d_inner"),
+        "ssm": ("batch", "ssm_heads", None, "ssm_state"),
+    }
+    ax: Dict[str, Any] = {"pos": ()}
+    if n_groups:
+        ax["grouped"] = {
+            "conv": ("layers", "blocks") + sax["conv"],
+            "ssm": ("layers", "blocks") + sax["ssm"],
+        }
+        ax["attn_k"] = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        ax["attn_v"] = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    if trailing:
+        ax["trailing"] = {
+            "conv": ("layers",) + sax["conv"],
+            "ssm": ("layers",) + sax["ssm"],
+        }
+    return ax
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict, tokens: jax.Array):
+    x = L.embed(params["embed"], tokens, cfg.jdtype)
+    pos = cache["pos"]
+    positions = pos[None, None] + jnp.zeros((1, 1), jnp.int32)
+    n_groups, per_group, trailing = _plan(cfg)
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+    def mamba_step(x, lp, c):
+        return _mamba_block(lp, x, cfg, cache=c)
+
+    if n_groups:
+        shared = params["shared_attn"]
+
+        def group_body(x, inp):
+            gp, gc, kc, vc = inp
+
+            def inner(x, blk):
+                lp, c = blk
+                x, nc = mamba_step(x, lp, c)
+                return x, nc
+
+            x, ncs = jax.lax.scan(inner, x, (gp, gc))
+            # shared attention with its per-application KV cache
+            h = L.rmsnorm(shared["norm1"], x, eps=cfg.norm_eps)
+            q, k, v = L.attn_qkv(shared["attn"], h)
+            q = L.rope(q, positions, base=cfg.rope_base)
+            k = L.rope(k, positions, base=cfg.rope_base)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+            ctx = L.attention_decode(q, kc, vc, pos + 1)
+            x = x + L.attn_out(shared["attn"], ctx)
+            h = L.rmsnorm(shared["norm2"], x, eps=cfg.norm_eps)
+            x = x + L.mlp(shared["mlp"], h, act=cfg.act)
+            return x, (ncs, kc, vc)
+
+        x, (g_ncs, k_new, v_new) = jax.lax.scan(
+            group_body,
+            x,
+            (
+                params["grouped"],
+                cache["grouped"],
+                cache["attn_k"],
+                cache["attn_v"],
+            ),
+        )
+        new_cache["grouped"] = g_ncs
+        new_cache["attn_k"] = k_new
+        new_cache["attn_v"] = v_new
+    if trailing:
+        def tbody(x, blk):
+            lp, c = blk
+            x, nc = mamba_step(x, lp, c)
+            return x, nc
+
+        x, t_ncs = jax.lax.scan(tbody, x, (params["trailing"], cache["trailing"]))
+        new_cache["trailing"] = t_ncs
+    x = L.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = mask_pad_logits(L.unembed(params["embed"], x), cfg)
+    return logits, new_cache

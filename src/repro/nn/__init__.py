@@ -1,0 +1,8 @@
+"""Minimal pytree-native NN layer library with logical sharding axes.
+
+Parameters are nested dicts of ``jax.Array``; every init function returns a
+matching tree of *logical axis* tuples (strings) that
+:mod:`repro.nn.sharding` resolves to mesh ``PartitionSpec`` s. No framework
+dependency — pure JAX, scan-stacked layers.
+"""
+from repro.nn import layers, moe, sharding, ssd  # noqa: F401

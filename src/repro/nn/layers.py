@@ -1,0 +1,359 @@
+"""Core layers: linear, norms, RoPE, GQA attention (train/prefill/decode).
+
+Conventions
+-----------
+* params are dicts of arrays; every ``*_init`` returns ``(params, axes)``
+  where ``axes`` mirrors params with logical-axis tuples.
+* activations: ``x [B, S, E]``; attention heads ``[B, S, H, Dh]``.
+* three attention modes:
+    - ``dense``    : full scores (training, S <= ~4k; remat at layer level)
+    - ``chunked``  : scan over KV blocks with online softmax (32k prefill)
+    - ``decode``   : single-token query against a KV cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# inits
+# ---------------------------------------------------------------------------
+def linear_init(
+    key,
+    in_dim: int,
+    out_dim: int,
+    in_ax: Optional[str],
+    out_ax: Optional[str],
+    *,
+    bias: bool = False,
+    dtype=jnp.float32,
+    scale: Optional[float] = None,
+) -> Tuple[Params, Params]:
+    scale = (in_dim**-0.5) if scale is None else scale
+    w = scale * jax.random.normal(key, (in_dim, out_dim), dtype)
+    p, a = {"w": w}, {"w": (in_ax, out_ax)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        a["b"] = (out_ax,)
+    return p, a
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Tuple[Params, Params]:
+    return {"scale": jnp.ones((dim,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Tuple[Params, Params]:
+    return (
+        {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full-dim, or half-dim "2d" style as in ChatGLM)
+# ---------------------------------------------------------------------------
+def rope(
+    x: jax.Array,  # [B, S, H, Dh]
+    positions: jax.Array,  # [B, S] or [S]
+    *,
+    base: float = 10000.0,
+    fraction: float = 1.0,
+) -> jax.Array:
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA: repeat kv heads to match query heads. k: [B, S, Kh, Dh]."""
+    kh = k.shape[-2]
+    if kh == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kh, axis=-2)
+
+
+def _mask_bias(
+    q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: Optional[int]
+) -> jax.Array:
+    """Additive bias [.., Sq, Sk] from causality / sliding window."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_dense(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Sk, Kh, Dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    H, Dh = q.shape[-2], q.shape[-1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (Dh**0.5)
+    q_pos = q_offset + jnp.arange(q.shape[1])
+    k_pos = jnp.arange(k.shape[1])
+    if causal or window is not None:
+        scores = scores + _mask_bias(q_pos, k_pos, causal, window).astype(
+            scores.dtype
+        )
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax over KV blocks; O(S·block) live memory (prefill)."""
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    nblk = -(-Sk // block)
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block, H, Dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, H, Dh).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+    qs = q / (Dh**0.5)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        blk_idx, kblk, vblk = inp
+        k_pos = blk_idx * block + jnp.arange(block)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qs, kblk)
+        ok = k_pos[None, :] < Sk
+        if causal:
+            ok = ok & (q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(ok[None, None], s.astype(jnp.float32), NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vblk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nblk), kb, vb)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B, Sq, H, Dh]
+
+
+def attention_decode(
+    q: jax.Array,  # [B, 1, H, Dh]
+    k_cache: jax.Array,  # [B, S, Kh, Dh]
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # [] current filled length (the new token included)
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    H, Dh = q.shape[-2], q.shape[-1]
+    k = _expand_kv(k_cache, H)
+    v = _expand_kv(v_cache, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (Dh**0.5)
+    k_pos = jnp.arange(k.shape[1])
+    ok = k_pos < cache_len
+    if window is not None:
+        ok = ok & (k_pos >= cache_len - window)
+    s = jnp.where(ok[None, None, None, :], s.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def attn_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    qkv_bias: bool = False,
+    dtype=jnp.float32,
+    pad_to: Optional[int] = None,
+) -> Tuple[Params, Params]:
+    """``pad_to``: §Perf head padding — create ``pad_to`` q-heads (and the
+    proportional kv count) with ZERO-initialized extras (wq/wo rows), so
+    the function is identical at init but head dims divide the TP axis."""
+    n_real = n_heads
+    if pad_to and pad_to > n_heads:
+        ratio = max(1, n_heads // max(1, n_kv_heads))
+        n_heads = pad_to
+        n_kv_heads = max(1, pad_to // ratio)
+    ks = jax.random.split(key, 4)
+    s = d_model**-0.5
+    p = {
+        "wq": s * jax.random.normal(ks[0], (d_model, n_heads, head_dim), dtype),
+        "wk": s * jax.random.normal(ks[1], (d_model, n_kv_heads, head_dim), dtype),
+        "wv": s * jax.random.normal(ks[2], (d_model, n_kv_heads, head_dim), dtype),
+        "wo": s * jax.random.normal(ks[3], (n_heads, head_dim, d_model), dtype),
+    }
+    if pad_to and n_heads > n_real:
+        p["wq"] = p["wq"].at[:, n_real:, :].set(0.0)
+        p["wo"] = p["wo"].at[n_real:, :, :].set(0.0)
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads, head_dim), dtype)
+        a["bq"] = ("heads", "head_dim")
+        a["bk"] = ("kv_heads", "head_dim")
+        a["bv"] = ("kv_heads", "head_dim")
+    return p, a
+
+
+def attn_qkv(p: Params, x: jax.Array, xkv: Optional[jax.Array] = None):
+    """Project to q, k, v. ``xkv`` (if given) is the cross-attention source."""
+    src = x if xkv is None else xkv
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bse,ehd->bshd", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bse,ehd->bshd", src, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def attn_out(p: Params, ctx: jax.Array) -> jax.Array:
+    return jnp.einsum("bshd,hde->bse", ctx, p["wo"].astype(ctx.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GeLU)
+# ---------------------------------------------------------------------------
+def mlp_init(
+    key, d_model: int, d_ff: int, *, act: str = "swiglu", dtype=jnp.float32
+) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    s = d_model**-0.5
+    so = d_ff**-0.5
+    if act == "swiglu":
+        p = {
+            "wg": s * jax.random.normal(ks[0], (d_model, d_ff), dtype),
+            "wu": s * jax.random.normal(ks[1], (d_model, d_ff), dtype),
+            "wd": so * jax.random.normal(ks[2], (d_ff, d_model), dtype),
+        }
+        a = {
+            "wg": ("embed", "mlp"),
+            "wu": ("embed", "mlp"),
+            "wd": ("mlp", "embed"),
+        }
+    else:
+        p = {
+            "wu": s * jax.random.normal(ks[0], (d_model, d_ff), dtype),
+            "wd": so * jax.random.normal(ks[2], (d_ff, d_model), dtype),
+        }
+        a = {"wu": ("embed", "mlp"), "wd": ("mlp", "embed")}
+    return p, a
+
+
+def mlp(p: Params, x: jax.Array, *, act: str = "swiglu") -> jax.Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (
+            x @ p["wu"].astype(x.dtype)
+        )
+    else:
+        h = jax.nn.gelu(x @ p["wu"].astype(x.dtype))
+    return h @ p["wd"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+def embed_init(
+    key, vocab: int, d_model: int, *, dtype=jnp.float32, scale: float = 0.02
+) -> Tuple[Params, Params]:
+    e = scale * jax.random.normal(key, (vocab, d_model), dtype)
+    return {"embedding": e}, {"embedding": ("vocab", "embed")}
+
+
+def embed(p: Params, tokens: jax.Array, dtype=None) -> jax.Array:
+    e = p["embedding"]
+    if dtype is not None:
+        e = e.astype(dtype)
+    return jnp.take(e, tokens, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("bse,ve->bsv", x, p["embedding"].astype(x.dtype))
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return -(-vocab // multiple) * multiple

@@ -1,0 +1,103 @@
+"""Logical-axis → mesh-axis resolution (MaxText-style sharding rules).
+
+Every parameter init returns, alongside the array tree, a tree of logical
+axis name tuples, e.g. ``("embed", "mlp")`` for an MLP up-projection. This
+module maps those names onto physical mesh axes, with a divisibility guard:
+a logical axis is sharded only if its size is divisible by the mesh axis it
+would map to (otherwise replicated — e.g. phi3's 40 heads on a 16-way model
+axis stay replicated while its 17920-wide FFN shards).
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# default logical → mesh-axis rules; batch-like axes go to data parallel.
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    # tensor-parallel candidates
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "moe_mlp": "model",
+    "d_inner": "model",
+    "ssm_heads": "model",
+    "experts": None,  # default: tensor-parallel MoE (experts replicated)
+    "experts_sharded": "model",  # expert-parallel layout
+    # replicated
+    "embed": None,
+    "layers": None,
+    "blocks": None,
+    "head_dim": None,
+    "ssm_state": None,
+    "conv": None,
+    "expert_in": None,
+    # data-parallel (activations)
+    "batch": "__dp__",  # placeholder resolved to the dp axes tuple
+    "worker": "__dp__",
+    "seq": None,
+}
+
+
+def resolve_spec(
+    logical_axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: jax.sharding.Mesh,
+    rules: Optional[Mapping[str, Optional[str]]] = None,
+    dp_axes: Tuple[str, ...] = ("data",),
+) -> P:
+    """Resolve one parameter's logical axes to a PartitionSpec.
+
+    Divisibility guard: if ``shape[i]`` is not divisible by the mesh axis
+    size (product for dp tuples), that dim is replicated instead.
+    """
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    out = []
+    for dim, name in enumerate(logical_axes):
+        mesh_ax = rules.get(name) if name is not None else None
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        if mesh_ax == "__dp__":
+            size = 1
+            for ax in dp_axes:
+                size *= mesh.shape[ax]
+            if shape[dim] % size == 0 and shape[dim] >= size:
+                out.append(tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0])
+            else:
+                out.append(None)
+            continue
+        if shape[dim] % mesh.shape[mesh_ax] == 0 and shape[dim] >= mesh.shape[mesh_ax]:
+            out.append(mesh_ax)
+        else:
+            out.append(None)
+    # PartitionSpec forbids trailing Nones being meaningful; fine to keep.
+    return P(*out)
+
+
+def tree_specs(
+    params: object,
+    axes: object,
+    mesh: jax.sharding.Mesh,
+    rules: Optional[Mapping[str, Optional[str]]] = None,
+    dp_axes: Tuple[str, ...] = ("data",),
+):
+    """Map a (params, logical-axes) tree pair to a PartitionSpec tree."""
+    return jax.tree.map(
+        lambda p, ax: resolve_spec(tuple(ax), p.shape, mesh, rules, dp_axes),
+        params,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )
+
+
+def tree_shardings(specs, mesh: jax.sharding.Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,258 @@
+"""Mamba2 / SSD (state-space duality) block in pure JAX (arXiv:2405.21060).
+
+TPU adaptation (see DESIGN.md): the SSD *chunked* algorithm is exactly the
+MXU-friendly formulation — intra-chunk work is dense Q×Q matmuls, the
+inter-chunk recurrence is a short ``lax.scan`` over chunk states. We keep
+chunk length a config knob (roofline lever: larger chunks → more MXU work
+per HBM byte, more FLOPs wasted on the masked triangle).
+
+Shapes: x [B, S, E]; inner: heads H = d_inner / headdim P; state N.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+CONV_K = 4  # depthwise causal conv kernel width (mamba2 default)
+
+
+def ssd_init(
+    key,
+    d_model: int,
+    *,
+    d_inner: int,
+    headdim: int = 64,
+    d_state: int = 128,
+    dtype=jnp.float32,
+) -> Tuple[Params, Params]:
+    H = d_inner // headdim
+    conv_dim = d_inner + 2 * d_state  # x, B, C share the conv (ngroups=1)
+    ks = jax.random.split(key, 5)
+    s = d_model**-0.5
+    p = {
+        "in_proj": s
+        * jax.random.normal(
+            ks[0], (d_model, 2 * d_inner + 2 * d_state + H), dtype
+        ),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (CONV_K, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": (d_inner**-0.5)
+        * jax.random.normal(ks[2], (d_inner, d_model), dtype),
+    }
+    a = {
+        "in_proj": ("embed", "d_inner"),
+        "conv_w": ("conv", "d_inner"),
+        "conv_b": ("d_inner",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("d_inner",),
+        "out_proj": ("d_inner", "embed"),
+    }
+    return p, a
+
+
+def _split(p: Params, zxbcdt: jax.Array, d_inner: int, d_state: int, H: int):
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1
+    )
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: xbc [B,S,C], w [K,C] -> [B,S,C]."""
+    K, C = w.shape
+    lhs = xbc.transpose(0, 2, 1)  # [B, C, S]
+    rhs = w.transpose(1, 0)[:, None, :]  # [C, 1, K]
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs.astype(lhs.dtype),
+        window_strides=(1,),
+        padding=[(K - 1, 0)],
+        dimension_numbers=("NCH", "OIH", "NCH"),
+        feature_group_count=C,
+    )
+    return out.transpose(0, 2, 1) + b.astype(xbc.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x [..., Q] -> cumulative-segment-sum matrix [..., Q, Q] (i >= j)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan_chunked(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]  (post-softplus)
+    A: jax.Array,  # [H] negative
+    Bm: jax.Array,  # [B, S, N]
+    Cm: jax.Array,  # [B, S, N]
+    *,
+    chunk: int = 256,
+    h0: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    csh = lambda t, extra: t.reshape((Bsz, nc, chunk) + extra)
+    xc = csh(x, (H, P))
+    dtc = csh(dt, (H,))
+    Bc = csh(Bm, (N,))
+    Cc = csh(Cm, (N,))
+
+    dA = dtc * A.astype(dtc.dtype)  # [B,c,Q,H]
+    dA = dA.transpose(0, 1, 3, 2)  # [B,c,H,Q]
+    dA_cs = jnp.cumsum(dA, -1)  # [B,c,H,Q]
+
+    # --- intra-chunk (dense, MXU) ------------------------------------------
+    L = jnp.exp(_segsum(dA.astype(jnp.float32)))  # [B,c,H,Q,Q]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # [B,c,Q,Q]
+    scores = (
+        scores[:, :, None] * L.astype(scores.dtype)
+        * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    )  # [B,c,H,Q,Q]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xc)
+
+    # --- chunk states -------------------------------------------------------
+    decay_states = jnp.exp(
+        (dA_cs[..., -1:] - dA_cs).astype(jnp.float32)
+    ).astype(x.dtype)  # [B,c,H,Q]
+    states = jnp.einsum(
+        "bcjn,bchj,bcjhp->bchpn", Bc, decay_states * dtc.transpose(0, 1, 3, 2), xc
+    )  # [B,c,H,P,N]
+
+    # --- inter-chunk recurrence --------------------------------------------
+    chunk_decay = jnp.exp(dA_cs[..., -1].astype(jnp.float32)).astype(x.dtype)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+
+    def body(h, inp):
+        st, dec = inp  # [B,H,P,N], [B,H]
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h  # emit h_before
+
+    (h_fin, h_befores) = jax.lax.scan(
+        body,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_before = h_befores.transpose(1, 0, 2, 3, 4)  # [B,c,H,P,N]
+
+    # --- off-diagonal output ------------------------------------------------
+    state_decay = jnp.exp(dA_cs.astype(jnp.float32)).astype(x.dtype)  # [B,c,H,Q]
+    y_off = jnp.einsum(
+        "bcin,bchpn,bchi->bcihp", Cc, h_before, state_decay
+    )
+    y = (y_diag + y_off).reshape(Bsz, nc * chunk, H, P)[:, :S]
+    return y, h_fin
+
+
+def ssd_decode_step(
+    x: jax.Array,  # [B, H, P]
+    dt: jax.Array,  # [B, H]
+    A: jax.Array,  # [H]
+    Bm: jax.Array,  # [B, N]
+    Cm: jax.Array,  # [B, N]
+    h: jax.Array,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    dA = jnp.exp((dt * A.astype(dt.dtype)))  # [B,H]
+    h_new = h * dA[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", x, Bm, dt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm)
+    return y, h_new
+
+
+def ssd_block_apply(
+    p: Params,
+    x: jax.Array,  # [B, S, E]
+    *,
+    d_inner: int,
+    headdim: int,
+    d_state: int,
+    chunk: int = 256,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    norm_eps: float = 1e-6,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full mamba2 mixer. If ``cache`` is given, runs one decode step
+    (S must be 1) and returns the updated cache."""
+    H = d_inner // headdim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split(p, zxbcdt, d_inner, d_state, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is None:
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+        Bsz, S, _ = x.shape
+        xh = xs.reshape(Bsz, S, H, headdim)
+        dtp = jax.nn.softplus(
+            dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+        ).astype(x.dtype)
+        y, _ = ssd_scan_chunked(
+            xh, dtp, A.astype(x.dtype), Bm, Cm, chunk=chunk
+        )
+        y = y + p["D"].astype(x.dtype)[None, None, :, None] * xh
+        y = y.reshape(Bsz, S, d_inner)
+        new_cache = None
+    else:
+        # decode: S == 1
+        Bsz = x.shape[0]
+        conv_state = cache["conv"]  # [B, K-1, conv_dim]
+        win = jnp.concatenate([conv_state, xbc], axis=1)  # [B, K, conv_dim]
+        conv_out = (
+            jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(x.dtype))
+            + p["conv_b"].astype(x.dtype)
+        )[:, None, :]
+        xbc = jax.nn.silu(conv_out)
+        xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+        xh = xs.reshape(Bsz, H, headdim)
+        dtp = jax.nn.softplus(
+            dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+        ).astype(x.dtype)
+        y, h_new = ssd_decode_step(
+            xh, dtp, A.astype(x.dtype), Bm[:, 0], Cm[:, 0], cache["ssm"]
+        )
+        y = y + p["D"].astype(x.dtype)[None, :, None] * xh
+        y = y.reshape(Bsz, 1, d_inner)
+        new_cache = {"conv": win[:, 1:], "ssm": h_new}
+
+    # gated RMSNorm then out-projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + norm_eps).astype(y.dtype)) * p["norm"].astype(
+        y.dtype
+    )
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, new_cache
+
+
+def ssd_init_cache(
+    batch: int, d_inner: int, headdim: int, d_state: int, dtype=jnp.float32
+) -> Dict[str, jax.Array]:
+    H = d_inner // headdim
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, headdim, d_state), dtype),
+    }

@@ -1,0 +1,10 @@
+"""Optimizers (pytree-native, distribution-aware state)."""
+from repro.optim.optimizers import (
+    OptConfig,
+    adam,
+    make_optimizer,
+    sgd,
+    sgd_momentum,
+)
+
+__all__ = ["OptConfig", "adam", "make_optimizer", "sgd", "sgd_momentum"]

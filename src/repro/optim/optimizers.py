@@ -1,0 +1,157 @@
+"""Minimal optimizer library (SGD / SGD-momentum / Adam).
+
+Same functional shape as optax (init/update) but self-contained. Optimizer
+state mirrors the parameter tree → it inherits the parameter sharding
+(tensor-parallel dims sharded on "model", replicated across data-parallel),
+which is exactly what the distributed trainer needs.
+
+Distributed-Adam note (paper Sec. 5.3): workers run Adam on the *aggregated
+sparsified* gradient, so moments stay identical across workers — the
+update is computed once per replica from the common aggregate, matching
+the paper's "distributed version of the Adam optimizer".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adam"  # sgd | momentum | adam
+    learning_rate: float = 1e-3
+    momentum: float = 0.9
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = None
+    moment_dtype: str = "float32"  # "bfloat16" halves adam-state memory
+    # simple schedule: linear warmup then constant (cosine optional)
+    warmup_steps: int = 0
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    lr = jnp.asarray(cfg.learning_rate, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+        lr = lr * warm
+    return lr
+
+
+def _clip(grads, max_norm: Optional[float]):
+    if max_norm is None:
+        return grads
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def sgd(cfg: OptConfig) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads = _clip(grads, cfg.grad_clip)
+        lr = _lr_at(cfg, state["step"])
+        new_params = jax.tree.map(
+            lambda p, g: p - (lr * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new_params, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(cfg: OptConfig) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mom": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        grads = _clip(grads, cfg.grad_clip)
+        lr = _lr_at(cfg, state["step"])
+        mom = jax.tree.map(
+            lambda m, g: cfg.momentum * m + g.astype(jnp.float32),
+            state["mom"],
+            grads,
+        )
+        new_params = jax.tree.map(
+            lambda p, m: p - (lr * m).astype(p.dtype), params, mom
+        )
+        return new_params, {"step": state["step"] + 1, "mom": mom}
+
+    return Optimizer(init, update)
+
+
+def adam(cfg: OptConfig) -> Optimizer:
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, mdt)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+        }
+
+    def update(grads, state, params):
+        grads = _clip(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        lr = _lr_at(cfg, state["step"])
+        m = jax.tree.map(
+            lambda m_, g: (
+                cfg.b1 * m_.astype(jnp.float32)
+                + (1 - cfg.b1) * g.astype(jnp.float32)
+            ).astype(mdt),
+            state["m"],
+            grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: (
+                cfg.b2 * v_.astype(jnp.float32)
+                + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32))
+            ).astype(mdt),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - cfg.b1**step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2**step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            delta = lr * mh / (jnp.sqrt(vh) + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + lr * cfg.weight_decay * p.astype(jnp.float32)
+            return p - delta.astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+_KINDS = {"sgd": sgd, "momentum": sgd_momentum, "adam": adam}
+
+
+def make_optimizer(cfg: OptConfig) -> Optimizer:
+    try:
+        return _KINDS[cfg.kind](cfg)
+    except KeyError:
+        raise ValueError(
+            f"unknown optimizer {cfg.kind!r}; available: {sorted(_KINDS)}"
+        ) from None

@@ -1,0 +1,8 @@
+"""Make ``pytest tests/`` work without PYTHONPATH=src (and never touch
+jax device state here — the dry-run owns XLA_FLAGS, per DESIGN.md)."""
+import os
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(SRC))

@@ -1,0 +1,192 @@
+"""Per-architecture smoke tests (reduced variants) + decode parity.
+
+Every assigned arch instantiates a REDUCED variant of the same family
+(<=2 layers equivalent, d_model <= 512, <= 4 experts) and runs one forward
+/ train step on CPU asserting output shapes + no NaNs; decoders also run a
+cache step. Teacher-forcing parity checks decode-with-cache against the
+full forward pass for each cache implementation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.models import get_family, make_batch
+
+ARCHS = sorted(cfglib.ARCHS)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = cfglib.get_config(arch).smoke_variant()
+    mod = get_family(cfg)
+    params, axes = mod.init(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, 2, 16)
+    loss, metrics = jax.jit(lambda p, b: mod.loss_fn(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    # one SGD step decreases nothing necessarily, but must stay finite
+    g = jax.grad(lambda p: mod.loss_fn(p, cfg, batch)[0])(params)
+    newp = jax.tree.map(lambda p_, g_: p_ - 0.01 * g_, params, g)
+    loss2, _ = mod.loss_fn(newp, cfg, batch)
+    assert np.isfinite(float(loss2)), f"{arch}: non-finite post-step loss"
+    # logits shape via prefill
+    logits = mod.prefill(params, cfg, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = cfglib.get_config(arch).smoke_variant()
+    mod = get_family(cfg)
+    params, _ = mod.init(jax.random.PRNGKey(0), cfg)
+    cache = mod.init_cache(cfg, 2, 32)
+    tokens = jnp.zeros((2, 1), jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, c, t: mod.decode_step(p, cfg, c, t)
+    )(params, cache, tokens)
+    assert logits.shape == (2, 1, cfg.padded_vocab)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    assert int(cache2["pos"]) == 1
+    # cache axes tree matches cache structure
+    ax = mod.cache_axes(cfg)
+    jax.tree.map(lambda *_: None, cache, ax,
+                 is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _decode_all(mod, cfg, params, batch, T, cache_extra=None):
+    cache = mod.init_cache(cfg, batch["tokens"].shape[0], T)
+    if cache_extra:
+        cache.update(cache_extra)
+    outs = []
+    step = jax.jit(lambda p, c, t: mod.decode_step(p, cfg, c, t))
+    for t in range(T):
+        logits, cache = step(params, cache, batch["tokens"][:, t : t + 1])
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1)
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2.5-3b", "granite-3-8b-swa", "mamba2-780m", "zamba2-7b",
+             "whisper-tiny", "mixtral-8x7b"]
+)
+def test_decode_matches_forward(arch):
+    """Teacher-forcing parity: cached decode == full forward logits."""
+    cfg = cfglib.get_config(arch).smoke_variant().replace(
+        remat=False, capacity_factor=8.0  # dropless forward for parity
+    )
+    mod = get_family(cfg)
+    params, _ = mod.init(jax.random.PRNGKey(1), cfg)
+    T = 12
+    batch = make_batch(cfg, 2, T, key=jax.random.PRNGKey(3))
+    if cfg.family == "encdec":
+        full, _ = mod.forward(params, cfg, batch)
+        ck, cv = mod.build_cross_cache(params, cfg, batch["frames"])
+        dec = _decode_all(mod, cfg, params, batch, T,
+                          cache_extra={"ck": ck, "cv": cv})
+    else:
+        batch.pop("patches", None)
+        full, _ = mod.forward(params, cfg, batch)
+        dec = _decode_all(mod, cfg, params, batch, T)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_chunked_attention_matches_dense():
+    from repro.nn import layers as L
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    B, S, H, D = 2, 100, 4, 16
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, 2, D))
+    v = jax.random.normal(ks[2], (B, S, 2, D))
+    for window in (None, 17):
+        d = L.attention_dense(q, k, v, causal=True, window=window)
+        c = L.attention_chunked(q, k, v, causal=True, window=window, block=32)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(d),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_swa_ring_cache_matches_linear_cache():
+    """Ring-buffer SWA cache == full cache with window masking."""
+    cfg = cfglib.get_config("granite-3-8b-swa").smoke_variant()
+    assert cfg.sliding_window == 16
+    mod = get_family(cfg)
+    params, _ = mod.init(jax.random.PRNGKey(2), cfg)
+    T = 24  # > window -> the ring wraps
+    batch = make_batch(cfg, 1, T, key=jax.random.PRNGKey(4))
+    full, _ = mod.forward(params, cfg, batch)  # dense path applies window
+    dec = _decode_all(mod, cfg, params, batch, T)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_all_assigned_archs_present():
+    expected = {
+        "whisper-tiny", "qwen2.5-3b", "internvl2-1b", "mamba2-780m",
+        "chatglm3-6b", "zamba2-7b", "mixtral-8x7b", "deepseek-moe-16b",
+        "granite-3-8b", "phi3-medium-14b",
+    }
+    assert expected <= set(cfglib.ARCHS)
+
+
+def test_exact_config_dims():
+    """Assigned table dims are encoded exactly."""
+    c = cfglib.get_config("qwen2.5-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (36, 2048, 16, 2, 11008, 151936)
+    assert c.qkv_bias
+    c = cfglib.get_config("mixtral-8x7b")
+    assert (c.n_experts, c.moe_top_k, c.sliding_window) == (8, 2, 4096)
+    c = cfglib.get_config("deepseek-moe-16b")
+    assert (c.n_experts, c.moe_top_k, c.n_shared_experts) == (64, 6, 2)
+    c = cfglib.get_config("mamba2-780m")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (48, 1536, 128)
+    c = cfglib.get_config("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (81, 3584, 64)
+    c = cfglib.get_config("chatglm3-6b")
+    assert c.rope_fraction == 0.5 and c.n_kv_heads == 2
+    c = cfglib.get_config("phi3-medium-14b")
+    assert (c.n_heads, c.n_kv_heads, c.d_ff) == (40, 10, 17920)
+    c = cfglib.get_config("whisper-tiny")
+    assert (c.n_layers, c.n_enc_layers, c.d_model, c.vocab) == (4, 4, 384, 51865)
+    c = cfglib.get_config("internvl2-1b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == (24, 896, 14, 151655)
+    c = cfglib.get_config("granite-3-8b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (40, 4096, 12800, 49155)
+
+
+def test_moe_gather_dispatch_matches_einsum():
+    """§Perf gather dispatch is numerically identical to GShard einsum."""
+    import jax
+    from repro.nn import moe as M
+
+    key = jax.random.PRNGKey(0)
+    p, _ = M.moe_init(key, 32, 64, 4, n_shared=1, shared_d_ff=64)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 24, 32))
+    for cf in (0.5, 1.25):  # with and without dropping
+        y1, a1 = M.moe_apply(p, x, top_k=2, capacity_factor=cf,
+                             group_size=16, dispatch="einsum")
+        y2, a2 = M.moe_apply(p, x, top_k=2, capacity_factor=cf,
+                             group_size=16, dispatch="gather")
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(a1), float(a2), rtol=1e-6)
+
+
+def test_pad_heads_identical_function_at_init():
+    """Zero-init padding heads leave the forward function unchanged."""
+    cfg0 = cfglib.get_config("phi3-medium-14b").smoke_variant().replace(
+        remat=False, n_heads=5, n_kv_heads=5, head_dim=16)
+    cfg1 = cfg0.replace(pad_heads=8)
+    mod = get_family(cfg0)
+    batch = make_batch(cfg0, 2, 8)
+    p1, _ = mod.init(jax.random.PRNGKey(0), cfg1)
+    l1, _ = mod.forward(p1, cfg1, batch)
+    # the padded model must produce finite sane logits and its padding
+    # heads contribute exactly zero (wq rows and wo rows zeroed)
+    assert not np.any(np.isnan(np.asarray(l1, np.float32)))
+    assert float(jnp.abs(p1["layers"]["attn"]["wq"][:, :, cfg0.n_heads:]).sum()) == 0.0

@@ -1,0 +1,234 @@
+"""Distributed runtime integration tests.
+
+Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main pytest
+process keeps seeing 1 device (per the dry-run isolation contract).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compact import CompactState, compact_finalize, compact_select
+from repro.core.sparsify import SparsifierConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, devices: int = 8) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        timeout=480,
+    )
+    assert out.returncode == 0, f"subprocess failed:\n{out.stderr[-4000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# ---------------------------------------------------------------------------
+# compact-state equivalence with the dense simulator algebra
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["topk", "regtopk"])
+def test_compact_matches_dense_state(kind):
+    L, k, steps = 64, 8, 5
+    cfg = SparsifierConfig(kind=kind, sparsity=k / L, mu=1.5, omega=0.1)
+    from repro.core.compact import compact_init, reference_step
+
+    st = compact_init(L, k)
+    key = jax.random.PRNGKey(0)
+    g_prev_dense = jnp.zeros(L)
+    for t in range(steps):
+        key, sk = jax.random.split(key)
+        g = jax.random.normal(sk, (L,))
+        # dense reference on the reconstructed state
+        ghat_ref, mask_ref, _ = reference_step(cfg, st, g, g_prev_dense, k)
+        a, vals, idx = compact_select(cfg, st, g, k)
+        ghat = jnp.zeros(L).at[idx].set(vals)
+        np.testing.assert_allclose(
+            np.asarray(ghat), np.asarray(ghat_ref), rtol=1e-5, atol=1e-6
+        )
+        agg = 0.1 * ghat  # arbitrary aggregate
+        st = compact_finalize(st, a, vals, idx, agg)
+        g_prev_dense = agg
+
+
+def test_compact_cyclic_covers_all_coordinates():
+    L, k = 20, 6
+    cfg = SparsifierConfig(kind="cyclic", sparsity=k / L)
+    from repro.core.compact import compact_init
+
+    st = compact_init(L, k)
+    seen = set()
+    for t in range(-(-L // k) + 1):
+        g = jnp.ones(L)
+        a, vals, idx = compact_select(cfg, st, g, k)
+        seen.update(np.asarray(idx).tolist())
+        st = compact_finalize(st, a, vals, idx, jnp.zeros(L))
+    assert seen == set(range(L))
+
+
+# ---------------------------------------------------------------------------
+# multi-device integration (subprocess)
+# ---------------------------------------------------------------------------
+SUB_TEMPLATE = textwrap.dedent(
+    """
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.models import ModelConfig, get_family
+    from repro.core.distributed import DistConfig, assemble, init_sparsifier_state
+    from repro.core.sparsify import SparsifierConfig
+    from repro.optim import OptConfig, make_optimizer
+    from repro.data import TokenPipeline
+
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab=256, remat=False)
+    mod = get_family(cfg)
+
+    def train(kind, agg, steps=25):
+        dist = DistConfig(
+            sparsifier=SparsifierConfig(kind=kind, sparsity=0.05, mu=1.0),
+            optimizer=OptConfig(kind="adam", learning_rate=3e-3),
+            aggregation=agg, microbatches=2, dp_axes=("data",))
+        asm = assemble(mod, cfg, dist, mesh)
+        params, _ = mod.init(jax.random.PRNGKey(0), cfg)
+        opt = make_optimizer(dist.optimizer)
+        opt_state = opt.init(params)
+        sp_state, _ = init_sparsifier_state(asm.plan, 4, mesh, ("data",),
+                                            jnp.float32)
+        pipe = TokenPipeline(cfg, global_batch=8, seq=32)
+        step = jax.jit(asm.train_step)
+        losses = []
+        with mesh:
+            for t in range(steps):
+                params, opt_state, sp_state, m = step(
+                    params, opt_state, sp_state, pipe.batch_at(t))
+                losses.append(float(m["loss"]))
+        return losses, params
+
+    {BODY}
+    """
+)
+
+
+def test_sparse_equals_dense_aggregation_multidevice():
+    body = """
+l1, p1 = train("regtopk", "dense_allreduce")
+l2, p2 = train("regtopk", "sparse_allgather")
+d = max(abs(a - b) for a, b in zip(l1, l2))
+print(json.dumps({"max_loss_diff": d, "decreased": l1[-1] < l1[0]}))
+"""
+    res = run_sub(SUB_TEMPLATE.replace("{BODY}", body))
+    assert res["max_loss_diff"] < 1e-4
+    assert res["decreased"]
+
+
+@pytest.mark.parametrize("kind", ["topk", "cyclic", "none"])
+def test_all_kinds_train_multidevice(kind):
+    body = f"""
+l, p = train("{kind}", "dense_allreduce", steps=20)
+print(json.dumps({{"first": l[0], "last": l[-1]}}))
+"""
+    res = run_sub(SUB_TEMPLATE.replace("{BODY}", body))
+    assert np.isfinite(res["last"])
+    assert res["last"] < res["first"]
+
+
+def test_checkpoint_roundtrip_multidevice():
+    body = """
+import tempfile, os
+from repro.checkpoint import save, restore
+l, p = train("regtopk", "dense_allreduce", steps=5)
+d = tempfile.mkdtemp()
+save(d, p, metadata={"step": 5})
+p2 = restore(d, p)
+same = all(bool(jnp.allclose(a, b)) for a, b in
+           zip(jax.tree.leaves(p), jax.tree.leaves(p2)))
+print(json.dumps({"same": same}))
+"""
+    res = run_sub(SUB_TEMPLATE.replace("{BODY}", body))
+    assert res["same"]
+
+
+def test_dryrun_mini_multidevice():
+    """Mini dry-run: lower+compile a reduced arch on a (2,4) mesh and check
+    the cost walker sees nonzero flops and collectives."""
+    code = textwrap.dedent(
+        """
+        import json
+        import jax, jax.numpy as jnp
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import configs as cfglib
+        from repro.models import get_family, input_specs
+        from repro.core.distributed import DistConfig, assemble
+        from repro.core.sparsify import SparsifierConfig
+        from repro.optim import OptConfig, make_optimizer
+        from repro.launch import hlo_cost
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cfg = cfglib.get_config("qwen2.5-3b").smoke_variant()
+        mod = get_family(cfg)
+        dist = DistConfig(
+            sparsifier=SparsifierConfig(kind="regtopk", sparsity=0.01),
+            optimizer=OptConfig(kind="adam"),
+            aggregation="sparse_allgather", microbatches=2,
+            dp_axes=("data",))
+        asm = assemble(mod, cfg, dist, mesh)
+        opt_shape = jax.eval_shape(
+            lambda p: make_optimizer(dist.optimizer).init(p), asm.params_shape)
+        sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        batch = input_specs(cfg, 8, 32, kind="train")
+        bs = jax.tree.map(lambda s: NamedSharding(mesh, P("data")), batch)
+        opt_specs = {"step": P(), "m": asm.param_specs, "v": asm.param_specs}
+        with mesh:
+            lowered = jax.jit(
+                asm.train_step,
+                in_shardings=(sh(asm.param_specs), sh(opt_specs),
+                              sh(asm.state_specs), bs),
+            ).lower(asm.params_shape, opt_shape, asm.state_shapes, batch)
+            compiled = lowered.compile()
+        res = hlo_cost.analyze(compiled.as_text())
+        mem = compiled.memory_analysis()
+        print(json.dumps({
+            "flops": res["flops"],
+            "coll": res["collective_bytes"]["total"],
+            "peak": getattr(mem, "peak_memory_in_bytes", 0) or 0,
+        }))
+        """
+    )
+    res = run_sub(code)
+    assert res["flops"] > 1e6
+    assert res["coll"] > 0
+    assert res["peak"] > 0
+
+
+def test_train_cli_checkpoint_resume(tmp_path):
+    """End-to-end launcher: train -> checkpoint -> resume continues."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    ckpt = str(tmp_path / "ck")
+    base = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "paper-resnet-proxy", "--smoke", "--steps", "4",
+            "--global-batch", "2", "--seq", "16", "--log-every", "2"]
+    r1 = subprocess.run(base + ["--checkpoint", ckpt],
+                        capture_output=True, text=True, env=env, timeout=480)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    assert "checkpointed" in r1.stdout
+    r2 = subprocess.run(base + ["--resume", ckpt],
+                        capture_output=True, text=True, env=env, timeout=480)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from step 4" in r2.stdout
+    assert "step     7" in r2.stdout or "step 7" in r2.stdout.replace("  ", " ")

@@ -1,0 +1,402 @@
+"""Unit + property tests for the sparsification core (paper Algorithms 1–2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DistributedSim,
+    SparsifierConfig,
+    dense_mean,
+    exact_topk_mask,
+    fixed_k_payload,
+    make_sparsifier,
+    mask_to_payload,
+    scatter_add_payloads,
+    sparsity_to_k,
+    threshold_topk_mask,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# selectors
+# ---------------------------------------------------------------------------
+def test_exact_topk_mask_selects_largest():
+    x = jnp.array([0.1, -5.0, 3.0, 0.0, -2.0])
+    m = exact_topk_mask(jnp.abs(x), 2)
+    np.testing.assert_array_equal(m, [0, 1, 1, 0, 0])
+
+
+def test_exact_topk_edge_cases():
+    x = jnp.arange(4.0)
+    np.testing.assert_array_equal(exact_topk_mask(x, 0), jnp.zeros(4))
+    np.testing.assert_array_equal(exact_topk_mask(x, 4), jnp.ones(4))
+    np.testing.assert_array_equal(exact_topk_mask(x, 9), jnp.ones(4))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.floats(-1e3, 1e3, allow_nan=False, width=32), min_size=2, max_size=64
+    ),
+    st.integers(1, 64),
+)
+def test_exact_topk_cardinality_and_dominance(vals, k):
+    x = jnp.asarray(vals, jnp.float32)
+    k = min(k, x.shape[0])
+    score = jnp.abs(x)
+    m = np.asarray(exact_topk_mask(score, k))
+    assert int(m.sum()) == k
+    # every selected score >= every unselected score
+    sel = np.asarray(score)[m > 0]
+    unsel = np.asarray(score)[m == 0]
+    if len(sel) and len(unsel):
+        assert sel.min() >= unsel.max() - 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.floats(0, 1e3, allow_nan=False, width=32), min_size=4, max_size=128
+    ),
+    st.integers(1, 128),
+)
+def test_threshold_topk_superset_of_k(vals, k):
+    score = jnp.asarray(vals, jnp.float32)
+    k = min(k, score.shape[0])
+    m = np.asarray(threshold_topk_mask(score, k, n_iters=30))
+    # bisection invariant: at least k selected, and the selected set contains
+    # the exact top-k (threshold <= k-th largest value)
+    assert int(m.sum()) >= k
+    exact = np.asarray(exact_topk_mask(score, k))
+    # any exactly-selected index with score strictly above the threshold set
+    # must also be threshold-selected: check via score comparison
+    sel_scores = np.asarray(score)[m > 0]
+    kth = np.sort(np.asarray(score))[-k]
+    assert sel_scores.min() <= kth + 1e-6
+
+
+def test_threshold_matches_exact_when_distinct():
+    score = jnp.array([5.0, 1.0, 4.0, 2.0, 3.0])
+    m_t = threshold_topk_mask(score, 2, n_iters=40)
+    m_e = exact_topk_mask(score, 2)
+    np.testing.assert_array_equal(m_t, m_e)
+
+
+def test_fixed_k_payload_roundtrip():
+    vals = jnp.array([1.0, -9.0, 3.0, 0.5])
+    score = jnp.abs(vals)
+    pv, pi = fixed_k_payload(score, vals, 2)
+    dense = scatter_add_payloads(pv[None], pi[None], jnp.ones(1), 4)
+    np.testing.assert_allclose(dense, [0, -9.0, 3.0, 0])
+
+
+def test_mask_to_payload_pads_with_noops():
+    vals = jnp.array([1.0, -9.0, 3.0, 0.5])
+    mask = jnp.array([0.0, 1.0, 0.0, 0.0])  # cardinality 1 < k=3
+    pv, pi = mask_to_payload(mask, vals, 3)
+    dense = scatter_add_payloads(pv[None], pi[None], jnp.ones(1), 4)
+    np.testing.assert_allclose(dense, [0, -9.0, 0, 0])
+
+
+def test_sparsity_to_k():
+    assert sparsity_to_k(100, 0.01) == 1
+    assert sparsity_to_k(100, 0.015) == 2
+    assert sparsity_to_k(100, 1.0) == 100
+    assert sparsity_to_k(100, 0.0) == 1  # floor at 1
+    assert sparsity_to_k(10, 0.5) == 5
+
+
+# ---------------------------------------------------------------------------
+# sparsifier algebra (paper Algorithm 1 / 2 invariants)
+# ---------------------------------------------------------------------------
+def _step(kind, g, state=None, g_prev=None, **kw):
+    cfg = SparsifierConfig(kind=kind, **kw)
+    sp = make_sparsifier(cfg)
+    if state is None:
+        state = sp.init(g.shape[0])
+    if g_prev is None:
+        g_prev = jnp.zeros_like(g)
+    return sp, sp.step(state, g, g_prev)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32), min_size=4, max_size=64
+    ),
+    st.floats(0.05, 1.0),
+)
+def test_error_conservation(vals, S):
+    """eps' + ghat == a == eps + g  (Alg. 1 lines 3/6; Alg. 2 lines 7/12)."""
+    g = jnp.asarray(vals, jnp.float32)
+    for kind in ("topk", "regtopk", "hard_threshold"):
+        sp, (ghat, mask, ns) = _step(kind, g, sparsity=S, threshold=1.0)
+        np.testing.assert_allclose(ns.eps + ghat, g, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32), min_size=4, max_size=64
+    )
+)
+def test_mask_cardinality_topk(vals):
+    g = jnp.asarray(vals, jnp.float32)
+    k = sparsity_to_k(g.shape[0], 0.25)
+    sp, (ghat, mask, ns) = _step("topk", g, sparsity=0.25)
+    assert int(np.asarray(mask).sum()) == k
+    assert int((np.asarray(ghat) != 0).sum()) <= k
+
+
+def test_round0_regtopk_equals_topk():
+    """Alg. 2 line 2: round 0 of RegTop-k is plain Top-k."""
+    g = jnp.array([3.0, -1.0, 0.5, -7.0, 2.0])
+    _, (gh_t, m_t, _) = _step("topk", g, sparsity=0.4)
+    _, (gh_r, m_r, _) = _step("regtopk", g, sparsity=0.4, mu=1.0)
+    np.testing.assert_array_equal(m_t, m_r)
+    np.testing.assert_allclose(gh_t, gh_r)
+
+
+def test_mu_to_zero_recovers_topk_after_round0():
+    """Sec. 4 case (1): mu -> 0 makes the regularizer -> 1 (Top-k)."""
+    key = jax.random.PRNGKey(0)
+    g0 = jax.random.normal(key, (32,))
+    g1 = jax.random.normal(jax.random.fold_in(key, 1), (32,))
+    g_agg = 0.5 * g0  # arbitrary broadcast value
+
+    def run(kind, mu):
+        cfg = SparsifierConfig(kind=kind, sparsity=0.25, mu=mu, omega=1.0)
+        sp = make_sparsifier(cfg)
+        st_ = sp.init(32)
+        _, _, st_ = sp.step(st_, g0, jnp.zeros(32))
+        ghat, mask, _ = sp.step(st_, g1, g_agg)
+        return np.asarray(mask)
+
+    np.testing.assert_array_equal(run("regtopk", 1e-9), run("topk", 1e9))
+
+
+def test_regtopk_damps_cancelling_entry():
+    """Sec. 4 case (2): if entries cancel at the server, Delta = -1 and the
+    coordinate is damped to ~0 score -> never selected next round."""
+    # worker sees a large first coordinate that cancelled: g_agg_prev[0] = 0
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.5, mu=1.0, omega=0.5)
+    sp = make_sparsifier(cfg)
+    state = sp.init(2)
+    g0 = jnp.array([100.0, 1.0])
+    ghat, mask, state = sp.step(state, g0, jnp.zeros(2))  # round0: picks idx0
+    np.testing.assert_array_equal(mask, [1.0, 0.0])
+    g_agg = jnp.array([0.0, 0.0])  # the big entry cancelled at the server
+    g1 = jnp.array([100.0, 1.0])
+    ghat, mask, state = sp.step(state, g1, g_agg)
+    # accumulated a = [100, 2]; Delta[0] = (0 - .5*100)/(.5*100) = -1
+    # -> score[0] = 100 * tanh(0) = 0 < score[1] -> picks idx1
+    np.testing.assert_array_equal(mask, [0.0, 1.0])
+
+
+def test_posterior_distortion_formula():
+    """Check Delta against Alg. 2 line 8 by hand."""
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.5, mu=2.0, omega=0.25)
+    sp = make_sparsifier(cfg)
+    state = sp.init(4)
+    g0 = jnp.array([4.0, -3.0, 2.0, 1.0])
+    _, m0, state = sp.step(state, g0, jnp.zeros(4))  # selects idx 0,1
+    g_agg = jnp.array([2.0, -1.0, 0.3, 0.2])
+    g1 = jnp.array([1.0, 1.0, 1.0, 1.0])
+    a1 = state.eps + g1  # = [0,0,2,1] + [1,1,1,1] = [1,1,3,2]
+    np.testing.assert_allclose(a1, [1.0, 1.0, 3.0, 2.0])
+    # Delta_sent = (g_agg - w*a_prev)/(w*a1), sent = {0,1}
+    d0 = (2.0 - 0.25 * 4.0) / (0.25 * 1.0)  # = 4
+    d1 = (-1.0 - 0.25 * -3.0) / (0.25 * 1.0)  # = -1
+    score_expected = np.abs(np.asarray(a1)) * np.tanh(
+        np.abs(1 + np.array([d0, d1, cfg.q_const, cfg.q_const])) / 2.0
+    )
+    score = np.asarray(sp._score(state, a1, g_agg))
+    np.testing.assert_allclose(score, score_expected, rtol=1e-6)
+
+
+def test_hard_threshold_variable_k():
+    g = jnp.array([0.5, 2.0, -3.0, 0.1])
+    _, (ghat, mask, _) = _step("hard_threshold", g, threshold=1.0)
+    np.testing.assert_array_equal(mask, [0, 1, 1, 0])
+
+
+def test_none_sparsifier_identity():
+    g = jnp.array([1.0, -2.0, 3.0])
+    _, (ghat, mask, ns) = _step("none", g)
+    np.testing.assert_allclose(ghat, g)
+    np.testing.assert_allclose(ns.eps, 0.0)
+
+
+def test_zero_accumulated_gradient_no_nan():
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.5, mu=1.0)
+    sp = make_sparsifier(cfg)
+    state = sp.init(4)
+    _, _, state = sp.step(state, jnp.zeros(4), jnp.zeros(4))
+    ghat, mask, state = sp.step(state, jnp.zeros(4), jnp.zeros(4))
+    assert not np.any(np.isnan(np.asarray(ghat)))
+    assert not np.any(np.isnan(np.asarray(state.eps)))
+
+
+def test_y_exponent_changes_ranking():
+    """Remark 4: y < 1 flattens the prior; ranking can change."""
+    cfg1 = SparsifierConfig(kind="regtopk", sparsity=0.5, mu=1.0, y=1.0)
+    cfg2 = SparsifierConfig(kind="regtopk", sparsity=0.5, mu=1.0, y=0.1)
+    sp1, sp2 = make_sparsifier(cfg1), make_sparsifier(cfg2)
+    a = jnp.array([10.0, 1.0])
+    st1 = sp1.init(2)._replace(
+        s_prev=jnp.array([1.0, 1.0]),
+        a_prev=jnp.array([10.0, 1.0]),
+        t=jnp.ones((), jnp.int32),
+    )
+    g_prev = jnp.array([1.0, 1.2])  # idx0 mostly cancelled, idx1 reinforced
+    s1 = np.asarray(sp1._score(st1, a, g_prev))
+    s2 = np.asarray(sp2._score(st1, a, g_prev))
+    # with y=0.1 the regularizer dominates -> ranking flips toward idx1
+    assert (s1[0] > s1[1]) != (s2[0] > s2[1]) or s2[1] > s2[0]
+
+
+# ---------------------------------------------------------------------------
+# aggregation equivalence
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dense_vs_sparse_aggregation_equivalence(seed):
+    key = jax.random.PRNGKey(seed)
+    N, L, k = 4, 32, 8
+    ghat = jax.random.normal(key, (N, L))
+    # sparsify each row to exactly k nonzeros
+    masks = jax.vmap(lambda r: exact_topk_mask(jnp.abs(r), k))(ghat)
+    ghat = ghat * masks
+    w = jnp.full((N,), 1.0 / N)
+    dense = dense_mean(ghat, w)
+    vals, idx = jax.vmap(lambda m, v: mask_to_payload(m, v, k))(masks, ghat)
+    sparse = scatter_add_payloads(vals, idx, w, L)
+    np.testing.assert_allclose(dense, sparse, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end simulator behaviour (paper Fig. 1 toy, exact numbers)
+# ---------------------------------------------------------------------------
+def _toy_sim(kind, mu=1.0, steps=60):
+    x = jnp.array([[100.0, 1.0], [-100.0, 1.0]])
+
+    def grad_fn(theta, n):
+        xn = x[n]
+        e = jnp.exp(-jnp.dot(theta, xn))
+        return -e * xn / (1 + e)
+
+    def loss(theta):
+        return jnp.mean(jnp.log(1 + jnp.exp(-x @ theta)))
+
+    cfg = SparsifierConfig(kind=kind, sparsity=0.5, mu=mu)
+    sim = DistributedSim(
+        grad_fn, n_workers=2, length=2, sparsifier_cfg=cfg, learning_rate=0.9
+    )
+    fin, trace = sim.run(jnp.array([0.0, 1.0]), steps, trace_fn=loss)
+    return np.asarray(trace)
+
+
+def test_fig1_topk_stuck_regtopk_tracks():
+    """Paper Fig. 1: Top-1 makes no progress for ~50 iters; RegTop-1 tracks
+    centralized training."""
+    t_topk = _toy_sim("topk")
+    t_reg = _toy_sim("regtopk")
+    t_none = _toy_sim("none")
+    assert t_topk[49] == pytest.approx(t_topk[0])  # stuck
+    assert t_reg[49] < 0.05  # converging
+    assert abs(t_reg[49] - t_none[49]) < 0.01  # tracks ideal
+
+
+def test_simulator_sparse_aggregation_matches_dense():
+    x = jnp.array([[100.0, 1.0], [-100.0, 1.0]])
+
+    def grad_fn(theta, n):
+        xn = x[n]
+        e = jnp.exp(-jnp.dot(theta, xn))
+        return -e * xn / (1 + e)
+
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.5, mu=1.0)
+    out = {}
+    for agg in ("dense_allreduce", "sparse_allgather"):
+        sim = DistributedSim(
+            grad_fn, 2, 2, cfg, learning_rate=0.9, aggregation=agg
+        )
+        fin, _ = sim.run(jnp.array([0.0, 1.0]), 30)
+        out[agg] = np.asarray(fin.theta)
+    np.testing.assert_allclose(
+        out["dense_allreduce"], out["sparse_allgather"], rtol=1e-5
+    )
+
+
+def test_dgc_momentum_correction():
+    """DGC: velocity conservation + momentum masking (Lin et al. [26])."""
+    cfg = SparsifierConfig(kind="dgc", sparsity=0.5)
+    sp = make_sparsifier(cfg)
+    state = sp.init(4)
+    g = jnp.array([4.0, -3.0, 1.0, 0.5])
+    ghat, mask, s1 = sp.step(state, g, jnp.zeros(4))
+    # round 0: u = g, v = g -> top-2 = idx 0,1
+    np.testing.assert_array_equal(mask, [1, 1, 0, 0])
+    np.testing.assert_allclose(s1.eps + ghat, g)  # v conserved
+    # momentum zeroed where sent
+    np.testing.assert_allclose(np.asarray(s1.a_prev)[:2], 0.0)
+    np.testing.assert_allclose(np.asarray(s1.a_prev)[2:], [1.0, 0.5])
+    # round 1: u = 0.9*u_prev + g
+    g2 = jnp.array([0.0, 0.0, 1.0, 0.0])
+    ghat2, mask2, s2 = sp.step(s1, g2, jnp.zeros(4))
+    # v = eps + u = [0,0,1,0.5] + [0,0,1.9,0.45] = [0,0,2.9,0.95]
+    np.testing.assert_allclose(np.asarray(ghat2), [0, 0, 2.9, 0.95], rtol=1e-6)
+
+
+def test_dgc_toy_example_progresses():
+    t = _toy_sim("dgc")
+    assert np.isfinite(t).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8))
+def test_coordinated_kinds_produce_identical_masks(seed, n_workers):
+    """coordtopk/cyclic invariant: given identical common inputs (broadcast
+    aggregate + synchronized state), every worker selects the same mask
+    regardless of its private gradient."""
+    key = jax.random.PRNGKey(seed)
+    L, S = 24, 0.25
+    grads = jax.random.normal(key, (n_workers, L))  # heterogeneous
+    g_prev = jax.random.normal(jax.random.fold_in(key, 1), (L,))
+    for kind in ("coordtopk",):
+        cfg = SparsifierConfig(kind=kind, sparsity=S)
+        sp = make_sparsifier(cfg)
+        st_ = sp.init(L)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_workers,) + x.shape), st_
+        )
+        for _ in range(3):
+            ghat, masks, stacked = jax.vmap(
+                sp.step, in_axes=(0, 0, None)
+            )(stacked, grads, g_prev)
+            m = np.asarray(masks)
+            assert (m == m[0]).all(), f"{kind}: masks diverged"
+
+
+def test_coordtopk_linreg_converges_where_topk_plateaus():
+    """The §Beyond headline in miniature: S=0.3, N=8 heterogeneous linreg."""
+    from repro.data.pipeline import linreg_grad_fn, make_linreg
+
+    data = make_linreg(5, 8, 32, 100)
+    grad_fn = linreg_grad_fn(data)
+    out = {}
+    for kind in ("topk", "coordtopk"):
+        cfg = SparsifierConfig(kind=kind, sparsity=0.3)
+        sim = DistributedSim(grad_fn, 8, 32, cfg, learning_rate=1e-2)
+        _, tr = sim.run(
+            jnp.zeros(32), 3000,
+            trace_fn=lambda th: jnp.linalg.norm(th - data.theta_star),
+        )
+        out[kind] = float(np.asarray(tr)[-1])
+    assert out["coordtopk"] < 1e-4
+    assert out["topk"] > 10 * out["coordtopk"]
