@@ -1,14 +1,17 @@
 """Communication-volume table (paper Sec. 2.2: S ~= k/J compression).
 
-Analytic wire words/round/worker for the two aggregation collectives at
-the assigned sparsities, for each architecture's J — the quantity the
-paper's technique actually reduces. Cross-checked against the dry-run
-HLO collective bytes in EXPERIMENTS.md.
+Per-round, per-worker wire volume for each architecture's J at the assigned
+sparsities: the legacy words table (dense vs fp32-COO allgather) plus the
+``repro.comm`` codec bytes through the alpha–beta cost model — the quantity
+the paper's technique actually reduces. Cross-checked against the dry-run
+HLO collective bytes in EXPERIMENTS.md; the codec x strategy numerics sweep
+lives in ``comm_bench``.
 """
 from __future__ import annotations
 
 from benchmarks.common import row
 from benchmarks.roofline import count_params
+from repro import comm
 from repro import configs as cfglib
 from repro.core import wire_words_per_worker
 
@@ -26,13 +29,17 @@ def run():
             k = max(1, int(S * J))
             dense = wire_words_per_worker("dense_allreduce", J, k, N_WORKERS)
             sparse = wire_words_per_worker("sparse_allgather", J, k, N_WORKERS)
+            codec_bytes = ";".join(
+                f"{name}_B={comm.predicted_bytes(name, 'sparse_allgather', J, k, (N_WORKERS,))}"
+                for name in sorted(comm.CODECS)
+            )
             rows.append(
                 row(
                     f"comm/{arch}/S={S}",
                     0.0,
                     f"J={J};dense_words={dense};sparse_words={sparse};"
                     f"allgather_reduction={dense / sparse:.1f}x;"
-                    f"uplink_reduction={J / (2 * k):.0f}x",
+                    f"uplink_reduction={J / (2 * k):.0f}x;{codec_bytes}",
                 )
             )
     return rows

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   fig6_nn_proxy — paper Fig. 6/Tab. 1 (NN training proxy)
   fig7_mu_sweep — paper Fig. 7 (mu sensitivity; mu=0 == Top-k)
   comm_volume   — Sec. 2.2 compression table
+  comm_bench    — repro.comm codec x strategy x sparsity sweep (ISSUE 1)
   kernel_bench  — Pallas kernel microbenches
   roofline      — §Roofline terms from the dry-run artifacts
   perf_summary  — §Perf hillclimb before/after + multi-pod scaling
@@ -30,6 +31,7 @@ MODULES = [
     "fig6_nn_proxy",
     "fig7_mu_sweep",
     "comm_volume",
+    "comm_bench",
     "kernel_bench",
     "serve_bench",
     "roofline",

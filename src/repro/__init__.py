@@ -1,6 +1,7 @@
 """repro — RegTop-k (Bayesian gradient sparsification) as a JAX framework.
 
-Subpackages: core (sparsifiers + distributed runtime), nn, models, configs,
-optim, data, checkpoint, launch, kernels. See README.md.
+Subpackages: core (sparsifiers + distributed runtime), comm (wire codecs,
+collective strategies, cost accounting), nn, models, configs, optim, data,
+checkpoint, launch, kernels. See README.md.
 """
 __version__ = "0.1.0"

@@ -1,0 +1,67 @@
+"""``repro.comm`` — the communication subsystem.
+
+Three layers (ISSUE 1 tentpole):
+
+* :mod:`repro.comm.codec`       — wire codecs with exact bit accounting
+  (``coo_fp32`` | ``coo_idx_delta`` | ``bitmap_dense`` | ``coo_q8``).
+* :mod:`repro.comm.collectives` — aggregation strategies over payloads
+  (``dense_allreduce`` | ``sparse_allgather`` | ``hierarchical``), each in
+  single-process reference and in-``shard_map`` form.
+* :mod:`repro.comm.cost`        — alpha–beta cost model + measured
+  bytes-on-wire counters surfaced in train-step metrics.
+
+All gradient aggregation in :mod:`repro.core.distributed` and
+:mod:`repro.core.simulator` routes through this package, selected by
+``DistConfig.codec`` / ``DistConfig.collective``.
+"""
+from repro.comm.codec import (
+    CODECS,
+    BitmapDense,
+    Codec,
+    CooFp32,
+    CooIdxDelta,
+    CooQ8,
+    delta_index_dtype,
+    get_codec,
+)
+from repro.comm.collectives import (
+    COLLECTIVES,
+    Collective,
+    DenseAllreduce,
+    Hierarchical,
+    SparseAllgather,
+    get_collective,
+)
+from repro.comm.cost import (
+    AlphaBeta,
+    CostEstimate,
+    measured_bytes,
+    payload_nbytes,
+    predict,
+    predicted_bytes,
+    wire_words_per_worker,
+)
+
+__all__ = [
+    "AlphaBeta",
+    "BitmapDense",
+    "CODECS",
+    "COLLECTIVES",
+    "Codec",
+    "Collective",
+    "CooFp32",
+    "CooIdxDelta",
+    "CooQ8",
+    "CostEstimate",
+    "DenseAllreduce",
+    "Hierarchical",
+    "SparseAllgather",
+    "delta_index_dtype",
+    "get_codec",
+    "get_collective",
+    "measured_bytes",
+    "payload_nbytes",
+    "predict",
+    "predicted_bytes",
+    "wire_words_per_worker",
+]

@@ -1,0 +1,152 @@
+"""Communication cost accounting: alpha–beta model + measured bytes.
+
+Two views of every round, per (codec, collective, mesh):
+
+* ``predicted_bytes`` / ``predict`` — the analytic alpha–beta model
+  (latency ``alpha`` per message + ``beta`` seconds/byte), computed from the
+  codec's exact ``wire_bits`` accounting and the collective's communication
+  pattern. This generalizes the old ``aggregate.wire_words_per_worker``.
+* ``measured_bytes`` — the same pattern costed with the *actual* encoded
+  buffer sizes (``payload_nbytes`` over the payload pytree). Because all
+  payload shapes are static, this is exact, and benchmarks assert
+  ``measured <= predicted * 1.05``.
+
+Patterns (per-worker, per-round, ring realizations):
+
+* ``dense_allreduce``  — ring allreduce of the dense [L] vector:
+  ``2·(N-1)/N·L·word`` bytes, ``2·(N-1)`` messages.
+* ``sparse_allgather`` — ring allgather of the payload: ``(N-1)·payload``
+  bytes received, ``N-1`` messages.
+* ``hierarchical``     — allgather over the inter axes (``(B-1)·payload``)
+  + dense ring allreduce over the intra axis (``2·(A-1)/A·L·word``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.comm.codec import Codec, Payload, get_codec
+
+WORD_BYTES = 4  # fp32 words, the dense baseline unit
+
+
+@dataclasses.dataclass(frozen=True)
+class AlphaBeta:
+    """Classic LogP-style link model: ``alpha`` s/message, ``beta`` s/byte.
+
+    Defaults approximate a datacenter NIC: 10 us latency, 100 GB/s links.
+    """
+
+    alpha: float = 1e-5
+    beta: float = 1e-11
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    bytes_on_wire: int  # per worker per round
+    n_messages: int
+    seconds: float
+
+
+def payload_nbytes(payload: Payload) -> int:
+    """Actual buffer bytes of one encoded payload (static shapes)."""
+    return int(
+        sum(
+            int(np.prod(x.shape)) * jax.dtypes.canonicalize_dtype(
+                x.dtype
+            ).itemsize
+            for x in jax.tree.leaves(payload)
+        )
+    )
+
+
+def _pattern(
+    collective: str,
+    length: int,
+    payload_bytes: float,
+    dp_sizes: Sequence[int],
+    word_bytes: int = WORD_BYTES,
+):
+    """(bytes, messages) for one worker, one round."""
+    sizes = [int(s) for s in dp_sizes] or [1]
+    n = int(np.prod(sizes))
+    if collective == "dense_allreduce":
+        return 2.0 * (n - 1) / max(n, 1) * length * word_bytes, 2 * (n - 1)
+    if collective == "sparse_allgather":
+        return (n - 1) * payload_bytes, n - 1
+    if collective == "hierarchical":
+        # last dp axis = intra (fast, dense allreduce); outer axes = inter
+        # (slow, compressed payload allgather) — matches Hierarchical.shard.
+        a = sizes[-1]
+        b = int(np.prod(sizes[:-1])) if len(sizes) > 1 else 1
+        inter = (b - 1) * payload_bytes
+        intra = 2.0 * (a - 1) / max(a, 1) * length * word_bytes
+        return inter + intra, (b - 1) + 2 * (a - 1)
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+def predicted_bytes(
+    codec: Codec | str,
+    collective: str,
+    length: int,
+    k: int,
+    dp_sizes: Sequence[int],
+    word_bytes: int = WORD_BYTES,
+) -> int:
+    """Per-worker bytes/round from the codec's exact bit accounting.
+    ``word_bytes`` sizes the dense terms (4 for fp32, 2 for bf16 state)."""
+    c = get_codec(codec) if isinstance(codec, str) else codec
+    pb = math.ceil(int(c.wire_bits(length, k)) / 8)
+    by, _ = _pattern(collective, length, pb, dp_sizes, word_bytes)
+    return math.ceil(by)
+
+
+def measured_bytes(
+    collective: str,
+    length: int,
+    payload: Payload,
+    dp_sizes: Sequence[int],
+    word_bytes: int = WORD_BYTES,
+) -> int:
+    """Per-worker bytes/round from the *actual* encoded buffers."""
+    by, _ = _pattern(
+        collective, length, payload_nbytes(payload), dp_sizes, word_bytes
+    )
+    return math.ceil(by)
+
+
+def predict(
+    codec: Codec | str,
+    collective: str,
+    length: int,
+    k: int,
+    dp_sizes: Sequence[int],
+    model: AlphaBeta = AlphaBeta(),
+) -> CostEstimate:
+    c = get_codec(codec) if isinstance(codec, str) else codec
+    pb = math.ceil(int(c.wire_bits(length, k)) / 8)
+    by, msgs = _pattern(collective, length, pb, dp_sizes)
+    return CostEstimate(
+        bytes_on_wire=math.ceil(by),
+        n_messages=msgs,
+        seconds=msgs * model.alpha + by * model.beta,
+    )
+
+
+def wire_words_per_worker(
+    mode: str, length: int, k: int, n_workers: int
+) -> int:
+    """Legacy analytic words/round (pre-``repro.comm`` interface).
+
+    Kept for the comm_volume benchmark table; new code should use
+    :func:`predict` which accounts for codec bit width and mesh shape.
+    """
+    if mode == "dense_allreduce":
+        return length
+    if mode == "sparse_allgather":
+        return 2 * k * n_workers
+    raise ValueError(f"unknown aggregation {mode!r}")

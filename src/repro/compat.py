@@ -1,0 +1,40 @@
+"""Version compatibility helpers.
+
+The codebase targets the current jax API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``); this module backfills the handful
+of call sites that moved between jax 0.4.x and newer releases so the repo
+runs on both. Import from here instead of feature-testing inline.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:  # jax <= 0.4.x: experimental namespace, check_vma was check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_04(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_rep=check_vma,
+        )
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` without ``axis_types`` (absent in jax <= 0.4.x;
+    explicit axis types are only needed by the newer sharding-in-types
+    work, which this repo does not rely on)."""
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

@@ -1,93 +1,29 @@
-"""Aggregation of sparsified gradients.
+"""Thin re-export shim — gradient aggregation lives in :mod:`repro.comm`.
 
-Two communication patterns (paper Sec. 2.2, Eq. (8): weighted average of the
-sparsified local gradients):
-
-* ``dense_allreduce``   — every worker contributes its sparse-but-dense
-  vector to a mean-allreduce. Numerically exact, used for simulation,
-  tests and the paper-repro benchmarks. Inside ``shard_map`` this is
-  ``lax.pmean`` over the data-parallel axes (J words on the wire —
-  the *uncompressed* baseline the paper compares against).
-
-* ``sparse_allgather``  — the compressed collective: each worker sends its
-  fixed-k payload ``(vals, idx)``; an ``all_gather`` over the dp axes moves
-  ``2·N·k`` words instead of ``N·J``; every rank then scatter-adds the
-  N payloads locally (server replicated at every rank, the TPU-native
-  analogue of the paper's parameter server). Identical numerics to
-  dense_allreduce when the selector is exact.
-
-Both are exposed (a) as in-``shard_map`` collectives and (b) as
-single-process N-worker reference reductions used by the simulator.
+Historically this module held the two inline aggregation patterns
+(``dense_allreduce`` psum and ``sparse_allgather`` all_gather+scatter-add).
+Those are now the ``repro.comm.collectives`` strategies, parameterized by
+the ``repro.comm.codec`` wire codecs, with cost accounting in
+``repro.comm.cost``. Import from ``repro.comm`` in new code.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from repro.comm.collectives import (
+    COLLECTIVES,
+    allgather_scatter,
+    allreduce_dense,
+    dense_mean,
+    scatter_add_payloads,
+)
+from repro.comm.cost import wire_words_per_worker
 
-import jax
-import jax.numpy as jnp
+AGGREGATIONS = tuple(sorted(COLLECTIVES))
 
-
-# ---------------------------------------------------------------------------
-# single-process reference reductions (worker axis is a real array axis)
-# ---------------------------------------------------------------------------
-def dense_mean(ghat_stack: jax.Array, weights: jax.Array) -> jax.Array:
-    """``ghat_stack``: [N, L]; ``weights``: [N] (omega_n, sum to 1)."""
-    return jnp.einsum("n,nl->l", weights, ghat_stack)
-
-
-def scatter_add_payloads(
-    vals: jax.Array, idx: jax.Array, weights: jax.Array, length: int
-) -> jax.Array:
-    """``vals``/``idx``: [N, k]; returns the weighted dense sum, [L]."""
-    flat_vals = (weights[:, None] * vals).reshape(-1)
-    flat_idx = idx.reshape(-1)
-    return jnp.zeros((length,), vals.dtype).at[flat_idx].add(flat_vals)
-
-
-# ---------------------------------------------------------------------------
-# in-shard_map collectives (manual axes)
-# ---------------------------------------------------------------------------
-def allreduce_dense(
-    ghat: jax.Array, axis_names: Sequence[str], weight: jax.Array | float
-) -> jax.Array:
-    """Weighted allreduce of the sparse-dense vector over the dp axes.
-
-    ``weight`` is this worker's omega_n; with uniform omega = 1/N this is
-    ``lax.pmean``. J words/worker on the wire (uncompressed pattern).
-    """
-    return jax.lax.psum(ghat * weight, tuple(axis_names))
-
-
-def allgather_scatter(
-    vals: jax.Array,
-    idx: jax.Array,
-    length: int,
-    axis_names: Sequence[str],
-    weight: jax.Array | float,
-) -> jax.Array:
-    """Compressed aggregation: all_gather fixed-k payloads + local scatter.
-
-    Wire cost per worker: 2·k words gathered from each of N workers
-    (value f32 + index i32) — the paper's S = k/J compression, realized
-    with static shapes as TPU/XLA requires.
-    """
-    wvals = vals * weight
-    g_vals, g_idx = wvals, idx
-    for ax in axis_names:
-        g_vals = jax.lax.all_gather(g_vals, ax)
-        g_idx = jax.lax.all_gather(g_idx, ax)
-    g_vals = g_vals.reshape(-1)
-    g_idx = g_idx.reshape(-1)
-    return jnp.zeros((length,), vals.dtype).at[g_idx].add(g_vals)
-
-
-AGGREGATIONS = ("dense_allreduce", "sparse_allgather")
-
-
-def wire_words_per_worker(mode: str, length: int, k: int, n_workers: int) -> int:
-    """Analytic per-round communication volume (words) — used in benches."""
-    if mode == "dense_allreduce":
-        return length
-    if mode == "sparse_allgather":
-        return 2 * k * n_workers
-    raise ValueError(f"unknown aggregation {mode!r}")
+__all__ = [
+    "AGGREGATIONS",
+    "allgather_scatter",
+    "allreduce_dense",
+    "dense_mean",
+    "scatter_add_payloads",
+    "wire_words_per_worker",
+]

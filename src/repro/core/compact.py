@@ -105,6 +105,30 @@ def compact_finalize(
     )
 
 
+def compact_finalize_sent(
+    st: CompactState,
+    a: jax.Array,
+    sent_vals: jax.Array,
+    sent_idx: jax.Array,
+    sent_dense: jax.Array,
+    agg: jax.Array,
+) -> CompactState:
+    """Codec-aware finalize: error feedback against what was *actually*
+    transmitted. ``sent_dense`` is the decoded wire contribution, so
+    ``eps' = a - sent_dense`` keeps any codec loss (e.g. ``coo_q8``
+    quantization residual) in the accumulator; ``sent_vals``/``sent_idx``
+    are the decoded payload — what the server saw — which is what RegTop-k's
+    posterior distortion must condition on next round. Identical to
+    :func:`compact_finalize` for lossless codecs."""
+    return CompactState(
+        eps=(a - sent_dense.astype(a.dtype)),
+        sent_vals=sent_vals.astype(st.sent_vals.dtype),
+        sent_g=agg[sent_idx].astype(st.sent_g.dtype),
+        sent_idx=sent_idx,
+        t=st.t + 1,
+    )
+
+
 # ---------------------------------------------------------------------------
 # dense-state equivalence oracle (used by tests)
 # ---------------------------------------------------------------------------

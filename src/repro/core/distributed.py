@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import comm
+from repro.compat import shard_map
 from repro.core import compact as C
 from repro.core.selectors import sparsity_to_k
 from repro.core.sparsify import SparsifierConfig
@@ -49,11 +51,16 @@ class DistConfig:
         kind="regtopk", sparsity=0.001
     )
     optimizer: OptConfig = OptConfig(kind="adam", learning_rate=1e-4)
-    aggregation: str = "sparse_allgather"  # or dense_allreduce
+    aggregation: str = "sparse_allgather"  # legacy alias for ``collective``
+    codec: str = "coo_fp32"  # repro.comm wire codec for payload collectives
+    collective: Optional[str] = None  # repro.comm strategy; None -> aggregation
     microbatches: int = 1
     dp_axes: Tuple[str, ...] = ("data",)
     state_dtype: str = "float32"  # eps dtype ("bfloat16" for the big archs)
     rules: Optional[Dict[str, Optional[str]]] = None
+
+    def resolved_collective(self) -> str:
+        return self.collective or self.aggregation
 
 
 class LeafPlan(NamedTuple):
@@ -142,9 +149,16 @@ def init_sparsifier_state(plan, W: int, mesh, dp_axes, dtype, shardings=None):
 # ---------------------------------------------------------------------------
 # the sparsify+aggregate shard_map stage
 # ---------------------------------------------------------------------------
-def _spa_leaf(g, st, p: LeafPlan, scfg, agg_mode, dp_axes):
+def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes):
     """Local (worker x model-shard) view: g [1, *local], st with leading
-    [1(,1)] axes. Returns (agg local shard [*local], new state)."""
+    [1(,1)] axes. Returns (agg local shard [*local], new state).
+
+    All aggregation routes through :mod:`repro.comm`: the ``dense_allreduce``
+    strategy psums the sparse-but-dense vector (uncompressed, exact); payload
+    strategies encode the fixed-k payload with ``codec``, run the collective,
+    and error-feed back against the *decoded* contribution so lossy codecs
+    (``coo_q8``) keep their residual in ``eps``.
+    """
     gl = g[0].reshape(p.local_len)
     stl = C.CompactState(
         eps=st.eps[0].reshape(p.local_len),
@@ -158,22 +172,21 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, agg_mode, dp_axes):
         new = stl._replace(t=stl.t + 1)
     else:
         a, vals, idx = C.compact_select(scfg, stl, gl, p.k)
-        if agg_mode == "dense_allreduce":
+        if collective == "dense_allreduce":
             ghat = jnp.zeros_like(a).at[idx].set(vals)
             agg = jax.lax.psum(ghat * scfg.omega, dp_axes)
-        else:  # sparse_allgather — the paper's compressed collective
-            gv, gi = vals * scfg.omega, idx
-            for ax in dp_axes:
-                gv = jax.lax.all_gather(gv, ax)
-                gi = jax.lax.all_gather(gi, ax)
-                gv = gv.reshape(-1, gv.shape[-1]) if gv.ndim > 2 else gv
-                gi = gi.reshape(-1, gi.shape[-1]) if gi.ndim > 2 else gi
-            agg = (
-                jnp.zeros_like(a)
-                .at[gi.reshape(-1)]
-                .add(gv.reshape(-1).astype(a.dtype))
+            new = C.compact_finalize(stl, a, vals, idx, agg)
+        else:
+            payload = codec.encode(vals, idx, p.local_len)
+            dvals, didx = codec.decode(payload, p.local_len)
+            sent_dense = (
+                jnp.zeros_like(a).at[didx].add(dvals.astype(a.dtype))
             )
-        new = C.compact_finalize(stl, a, vals, idx, agg)
+            strategy = comm.get_collective(collective)
+            agg = strategy.shard(
+                codec, payload, p.local_len, dp_axes, scfg.omega
+            ).astype(a.dtype)
+            new = C.compact_finalize_sent(stl, a, dvals, didx, sent_dense, agg)
     new_out = C.CompactState(
         eps=new.eps.reshape((1,) + p.local_shape),
         sent_vals=new.sent_vals[None, None],
@@ -191,12 +204,15 @@ def make_sparsify_aggregate(
     dp_spec = dp if len(dp) > 1 else dp[0]
     scfg = dataclasses.replace(dist.sparsifier, omega=1.0 / n_workers)
     plan_flat, plan_def = jax.tree.flatten(plan, is_leaf=_is_plan)
+    codec = comm.get_codec(dist.codec)
+    collective = dist.resolved_collective()
+    comm.get_collective(collective)  # fail fast on unknown strategy
 
     def body(grads, state):
         g_flat = plan_def.flatten_up_to(grads)
         s_flat = plan_def.flatten_up_to(state)
         outs = [
-            _spa_leaf(g, s, p, scfg, dist.aggregation, dp)
+            _spa_leaf(g, s, p, scfg, codec, collective, dp)
             for g, s, p in zip(g_flat, s_flat, plan_flat)
         ]
         agg = jax.tree.unflatten(plan_def, [o[0] for o in outs])
@@ -204,13 +220,67 @@ def make_sparsify_aggregate(
         return agg, new_state
 
     grads_in_specs = jax.tree.map(lambda s: P(dp_spec, *tuple(s)), param_specs)
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(grads_in_specs, state_specs),
         out_specs=(param_specs, state_specs),
         check_vma=False,
     )
+
+
+# ---------------------------------------------------------------------------
+# communication accounting (repro.comm.cost over the per-leaf plan)
+# ---------------------------------------------------------------------------
+def comm_round_bytes(plan, dist: DistConfig, mesh) -> Tuple[int, int]:
+    """(predicted, measured) bytes-on-wire per worker per round, summed over
+    leaves. Predicted comes from the codec's bit accounting; measured from
+    the actual encoded buffer shapes (via ``jax.eval_shape`` — exact, since
+    payload shapes are static)."""
+    codec = comm.get_codec(dist.codec)
+    collective = dist.resolved_collective()
+    dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
+    dense_wire = dist.sparsifier.kind == "none" or (
+        collective == "dense_allreduce"
+    )
+    # the sparsified dense psum carries the state-dtype vector (bf16 halves
+    # it); the kind="none" pmean upcasts to f32 first (see _spa_leaf).
+    dense_word = (
+        4
+        if dist.sparsifier.kind == "none"
+        else jnp.dtype(_DT[dist.state_dtype]).itemsize
+    )
+    pred = meas = 0
+    for p in jax.tree.leaves(plan, is_leaf=_is_plan):
+        if dense_wire:
+            pred += comm.predicted_bytes(
+                codec,
+                "dense_allreduce",
+                p.local_len,
+                p.k,
+                dp_sizes,
+                word_bytes=dense_word,
+            )
+            meas += comm.measured_bytes(
+                "dense_allreduce",
+                p.local_len,
+                {},
+                dp_sizes,
+                word_bytes=dense_word,
+            )
+        else:
+            payload_shape = jax.eval_shape(
+                lambda v, i, L=p.local_len: codec.encode(v, i, L),
+                jax.ShapeDtypeStruct((p.k,), jnp.float32),
+                jax.ShapeDtypeStruct((p.k,), jnp.int32),
+            )
+            pred += comm.predicted_bytes(
+                codec, collective, p.local_len, p.k, dp_sizes
+            )
+            meas += comm.measured_bytes(
+                collective, p.local_len, payload_shape, dp_sizes
+            )
+    return pred, meas
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +306,7 @@ def make_train_step(
     dp_spec = (
         tuple(dist.dp_axes) if len(dist.dp_axes) > 1 else dist.dp_axes[0]
     )
+    wire_pred, wire_meas = comm_round_bytes(plan, dist, mesh)
 
     acc_dt = _DT[dist.state_dtype]
 
@@ -282,7 +353,12 @@ def make_train_step(
         )
         agg, new_sp = spa(grads_w, sp_state)
         new_params, new_opt = opt.update(agg, opt_state, params)
-        return new_params, new_opt, new_sp, {"loss": losses.mean()}
+        metrics = {
+            "loss": losses.mean(),
+            "comm_bytes": jnp.asarray(wire_meas, jnp.float32),
+            "comm_bytes_predicted": jnp.asarray(wire_pred, jnp.float32),
+        }
+        return new_params, new_opt, new_sp, metrics
 
     return train_step
 

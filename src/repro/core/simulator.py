@@ -19,7 +19,9 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import comm
 from repro.core import aggregate
+from repro.core import selectors as sel_lib
 from repro.core.sparsify import (
     Sparsifier,
     SparsifierConfig,
@@ -44,7 +46,9 @@ class DistributedSim:
     length: int
     sparsifier_cfg: SparsifierConfig
     learning_rate: float = 1e-2
-    aggregation: str = "dense_allreduce"
+    aggregation: str = "dense_allreduce"  # legacy alias for ``collective``
+    codec: str = "coo_fp32"  # repro.comm wire codec for payload collectives
+    collective: Optional[str] = None  # repro.comm strategy; None -> aggregation
 
     def __post_init__(self):
         # uniform server weights omega_n = 1/N (paper's arithmetic mean);
@@ -52,6 +56,21 @@ class DistributedSim:
         cfg = dataclasses.replace(self.sparsifier_cfg, omega=1.0 / self.n_workers)
         self.sparsifier: Sparsifier = make_sparsifier(cfg)
         self.weights = jnp.full((self.n_workers,), 1.0 / self.n_workers)
+        coll = self.resolved_collective
+        self._codec = comm.get_codec(self.codec)
+        self._strategy = comm.get_collective(coll)
+        if coll != "dense_allreduce" and cfg.kind == "hard_threshold":
+            raise ValueError(
+                "hard_threshold produces a variable-cardinality mask; the "
+                f"fixed-k payload collective {coll!r} would silently drop "
+                "coordinates beyond k. Use aggregation/collective="
+                "'dense_allreduce' for hard_threshold (or a fixed-k "
+                "sparsifier for payload collectives)."
+            )
+
+    @property
+    def resolved_collective(self) -> str:
+        return self.collective or self.aggregation
 
     def init(self, theta0: jax.Array) -> SimState:
         single = self.sparsifier.init(self.length, dtype=theta0.dtype)
@@ -74,20 +93,40 @@ class DistributedSim:
             self.sparsifier.step, in_axes=(0, 0, None)
         )(state.worker_states, grads, state.g_agg_prev)
 
-        if self.aggregation == "dense_allreduce":
+        # kind="none" has no fixed-k payload (the mask is all-ones): always
+        # aggregate dense, exactly like the distributed runtime's _spa_leaf.
+        if (
+            self.resolved_collective == "dense_allreduce"
+            or self.sparsifier_cfg.kind == "none"
+        ):
             g_agg = aggregate.dense_mean(ghat, self.weights)
-        elif self.aggregation == "sparse_allgather":
-            from repro.core import selectors as sel_lib
-
-            k = sel_lib.sparsity_to_k(self.length, self.sparsifier.cfg.sparsity)
+        else:
+            codec, L = self._codec, self.length
+            k = sel_lib.sparsity_to_k(L, self.sparsifier.cfg.sparsity)
             vals, idx = jax.vmap(
                 lambda m, a: sel_lib.mask_to_payload(m, a, k)
             )(mask, ghat)
-            g_agg = aggregate.scatter_add_payloads(
-                vals, idx, self.weights, self.length
-            )
-        else:
-            raise ValueError(f"unknown aggregation {self.aggregation!r}")
+            payloads = jax.vmap(lambda v, i: codec.encode(v, i, L))(vals, idx)
+            if not codec.lossless:
+                # error feedback covers the codec: fold the decode residual
+                # (intended minus actually-transmitted) back into eps.
+                scatter = lambda v, i: jnp.zeros((L,), v.dtype).at[i].add(v)
+                intended = jax.vmap(scatter)(vals, idx)
+                sent = jax.vmap(
+                    lambda p: codec.decoded_dense(p, L)
+                )(payloads)
+                delta = (sent - intended).astype(new_ws.eps.dtype)
+                new_ws = new_ws._replace(eps=new_ws.eps - delta)
+                if self.sparsifier_cfg.kind == "regtopk":
+                    # RegTop-k's posterior must condition on what the server
+                    # actually saw: shift a_prev to the decoded values at the
+                    # sent coordinates (mirrors compact_finalize_sent in the
+                    # distributed runtime). Other kinds reuse the a_prev slot
+                    # for momentum/staleness — leave those untouched.
+                    new_ws = new_ws._replace(a_prev=new_ws.a_prev + delta)
+            g_agg = self._strategy.reference(
+                codec, payloads, self.weights, L
+            ).astype(ghat.dtype)
 
         theta = state.theta - self.learning_rate * g_agg
         new_state = SimState(
@@ -97,6 +136,20 @@ class DistributedSim:
             step=state.step + 1,
         )
         return new_state, g_agg
+
+    def wire_bytes_per_round(
+        self, model: comm.AlphaBeta = comm.AlphaBeta()
+    ) -> comm.CostEstimate:
+        """Per-worker alpha–beta cost of one round at this sim's settings."""
+        k = sel_lib.sparsity_to_k(self.length, self.sparsifier.cfg.sparsity)
+        return comm.predict(
+            self._codec,
+            self.resolved_collective,
+            self.length,
+            k,
+            (self.n_workers,),
+            model,
+        )
 
     def run(
         self,

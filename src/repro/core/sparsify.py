@@ -70,6 +70,7 @@ class SparsifierConfig:
     omega      — this worker's aggregation weight omega_n
     selector   — "exact" (lax.top_k) | "threshold" (bisection; ~k mask)
     threshold  — hard-threshold lambda (hard_threshold kind only)
+    momentum   — DGC momentum-correction factor (dgc kind only)
     score_fn   — optional override of the scoring function (fused Pallas
                  kernel plugs in here; must match RegTopK._score).
     """
@@ -82,6 +83,7 @@ class SparsifierConfig:
     omega: float = 1.0
     selector: str = "exact"
     threshold: float = 1e-3
+    momentum: float = 0.9
     score_fn: Optional[object] = None
 
 
@@ -234,12 +236,12 @@ class DGC(Sparsifier):
 
     u = m·u + g;  v = v_residual + u;  mask = Top_k(|v|)
     send mask·v;  v_residual = v − mask·v;  u = (1 − mask)·u
+
+    The momentum factor ``m`` comes from ``SparsifierConfig.momentum``.
     """
 
-    momentum: float = 0.9
-
     def step(self, state, g_local, g_agg_prev):
-        u = self.momentum * state.a_prev + g_local  # a_prev slot holds u
+        u = self.cfg.momentum * state.a_prev + g_local  # a_prev slot holds u
         v = state.eps + u
         mask = self._select(jnp.abs(v))
         ghat = mask * v

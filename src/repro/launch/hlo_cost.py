@@ -111,18 +111,21 @@ def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
     out_elems = 1
     for d in _shape_dims(op.type):
         out_elems *= d
-    # contraction size from lhs operand shape + contracting dims
+    # contraction size from lhs operand shape + contracting dims. The lhs
+    # operand is the text up to the first ", " — either "%name" (newer HLO
+    # text) or "f32[8,8]{1,0} %name" (older dialects inline the type).
     mc = _CONTRACT.search(op.rest)
     k = 1
     if mc:
-        ops = op.rest.split("),")[0]
-        first = _OPERAND.match(ops.strip().lstrip("("))
-        if first:
-            lhs_type = symtab.get(first.group(1), "")
-            dims = _shape_dims(lhs_type)
-            for ci in mc.group(1).split(","):
-                if ci and int(ci) < len(dims):
-                    k *= dims[int(ci)]
+        lhs = op.rest.split(", ")[0]
+        dims = _shape_dims(lhs)  # inline-typed operand
+        if not dims:
+            first = _OPERAND.match(lhs.strip().lstrip("(").lstrip("%"))
+            if first:
+                dims = _shape_dims(symtab.get(first.group(1), ""))
+        for ci in mc.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                k *= dims[int(ci)]
     return 2.0 * out_elems * k
 
 

@@ -10,24 +10,20 @@ from typing import Tuple
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Degenerate mesh over however many devices exist (tests / examples)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh(
-        (data, model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes_of(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

@@ -20,6 +20,7 @@ from repro.checkpoint import restore, save
 from repro.core.distributed import (
     DistConfig,
     assemble,
+    comm_round_bytes,
     init_sparsifier_state,
 )
 from repro.core.sparsify import SparsifierConfig
@@ -39,7 +40,14 @@ def main():
                     choices=["none", "topk", "regtopk", "cyclic"])
     ap.add_argument("--sparsity", type=float, default=0.01)
     ap.add_argument("--mu", type=float, default=1.0)
-    ap.add_argument("--aggregation", default="sparse_allgather")
+    ap.add_argument("--aggregation", default="sparse_allgather",
+                    help="legacy alias for --collective")
+    ap.add_argument("--codec", default="coo_fp32",
+                    choices=["coo_fp32", "coo_idx_delta", "bitmap_dense",
+                             "coo_q8"])
+    ap.add_argument("--collective", default=None,
+                    choices=["dense_allreduce", "sparse_allgather",
+                             "hierarchical"])
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default="host", choices=["host", "production"])
@@ -70,6 +78,8 @@ def main():
         ),
         optimizer=OptConfig(kind="adam", learning_rate=args.lr),
         aggregation=args.aggregation,
+        codec=args.codec,
+        collective=args.collective,
         microbatches=args.microbatches,
         dp_axes=dp_axes,
     )
@@ -93,6 +103,13 @@ def main():
 
     pipe = TokenPipeline(cfg, args.global_batch, args.seq)
     step_fn = jax.jit(asm.train_step)
+    pred_b, meas_b = comm_round_bytes(asm.plan, dist, mesh)
+    print(
+        f"comm: codec={dist.codec} collective={dist.resolved_collective()} "
+        f"{meas_b / 1e6:.3f} MB/worker/round "
+        f"(predicted {pred_b / 1e6:.3f} MB)",
+        flush=True,
+    )
     t0 = time.time()
     with mesh:
         for t in range(start, start + args.steps):

@@ -134,8 +134,8 @@ def test_expert_parallel_matches_tensor_layout():
         """
         import json
         import jax, jax.numpy as jnp, numpy as np
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         from repro.models import ModelConfig, get_family, make_batch
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.nn import sharding as shlib
