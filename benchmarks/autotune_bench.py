@@ -1,0 +1,221 @@
+"""Autotune sweep: per-leaf (codec x collective) planning vs fixed choices.
+
+For a grid of leaves (tiny bias .. dense-ish embedding shard) and dp meshes
+(single-axis and multi-pod), asserts the ISSUE-2 acceptance criteria:
+
+* the auto plan's predicted bytes are <= the best single *fixed* codec's
+  (each fixed codec planned with the same collective-selection procedure),
+* measured bytes (actual encoded buffer sizes) <= 1.05 x predicted, and
+* round-wise aggregation under ``codec="auto"`` stays numerically
+  equivalent to ``dense_allreduce`` (auto never admits lossy codecs).
+
+Also runs the :mod:`repro.comm.calibrate` micro-harness: times real
+collectives on the host backend (forced to 8 CPU devices when launched
+directly), fits alpha/beta, and reports the fitted model plus the plan it
+induces — the NCCL/ICI per-backend version is the ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules:  # force a multi-device host for calibration
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro import comm
+from repro.core import DistributedSim, SparsifierConfig
+from repro.data.pipeline import linreg_grad_fn, make_linreg
+
+# (label, local_len, sparsity) — shapes spanning the codec trade-off space
+LEAVES = (
+    ("bias_tiny", 64, 0.05),
+    ("norm_small", 1024, 0.01),
+    ("mlp_shard", 16384, 0.01),
+    ("embed_dense", 65536, 0.125),  # S > 1/32: bitmap territory
+    ("embed_sparse", 262144, 0.001),
+)
+MESHES = ((8,), (16,), (2, 8), (4, 8))
+FIXED_CODECS = tuple(
+    n for n in sorted(comm.CODECS) if comm.get_codec(n).lossless
+)
+
+
+def _sweep_rows():
+    from repro.core.selectors import sparsity_to_k
+
+    rows = []
+    for label, L, S in LEAVES:
+        k = sparsity_to_k(L, S)
+        for dp in MESHES:
+            auto = comm.choose_leaf(L, k, dp)
+            # best single fixed codec: same planning procedure, codec pinned
+            fixed = {
+                c: comm.choose_leaf(L, k, dp, codecs=[c])
+                for c in FIXED_CODECS
+            }
+            best_fixed_bytes = min(
+                d.cost.bytes_on_wire for d in fixed.values()
+            )
+            assert auto.cost.bytes_on_wire <= best_fixed_bytes, (
+                f"{label}/dp={dp}: auto {auto.codec}/{auto.collective} "
+                f"predicts {auto.cost.bytes_on_wire} B > best fixed "
+                f"{best_fixed_bytes} B"
+            )
+            assert auto.cost.seconds <= min(
+                d.cost.seconds for d in fixed.values()
+            ) * (1 + 1e-12), f"{label}/dp={dp}: auto not seconds-optimal"
+            # measured bytes of the chosen pair vs its own prediction
+            codec = comm.get_codec(auto.codec)
+            payload_shape = jax.eval_shape(
+                lambda v, i: codec.encode(v, i, L),
+                jax.ShapeDtypeStruct((k,), jnp.float32),
+                jax.ShapeDtypeStruct((k,), jnp.int32),
+            )
+            meas = comm.measured_bytes(
+                auto.collective, L, payload_shape, dp
+            )
+            assert meas <= auto.cost.bytes_on_wire * 1.05, (
+                f"{label}/dp={dp}: measured {meas} B > 1.05 x predicted "
+                f"{auto.cost.bytes_on_wire} B"
+            )
+            saved = best_fixed_bytes - auto.cost.bytes_on_wire
+            rows.append(
+                row(
+                    f"autotune/{label}/dp={'x'.join(map(str, dp))}",
+                    auto.cost.seconds * 1e6,
+                    f"pick={auto.codec}/{auto.collective};"
+                    f"predicted_B={auto.cost.bytes_on_wire};"
+                    f"measured_B={meas};saved_vs_best_fixed_B={saved}",
+                )
+            )
+    return rows
+
+
+def _tree_rows():
+    """Whole-tree totals: per-leaf auto vs the best single global codec.
+
+    This is where heterogeneity pays — one codec cannot be right for both
+    the dense-ish embedding shard and the tiny bias."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import LeafPlan
+    from repro.core.selectors import sparsity_to_k
+
+    rows = []
+    for dp in ((8,), (4, 8)):
+        tree = {
+            label: LeafPlan((L,), (L,), L, sparsity_to_k(L, S), P(None))
+            for label, L, S in LEAVES
+        }
+        auto_plan = comm.plan_tree(tree, dp)
+        fixed_totals = {
+            c: comm.plan_tree(tree, dp, codecs=[c]).total_bytes
+            for c in FIXED_CODECS
+        }
+        best_c = min(fixed_totals, key=fixed_totals.get)
+        assert auto_plan.total_bytes <= fixed_totals[best_c], (
+            f"dp={dp}: auto tree total {auto_plan.total_bytes} B > best "
+            f"single codec {best_c} ({fixed_totals[best_c]} B)"
+        )
+        picks = {
+            label: f"{d.codec}/{d.collective}"
+            for label, d in auto_plan.decisions.items()
+        }
+        rows.append(
+            row(
+                f"autotune/tree/dp={'x'.join(map(str, dp))}",
+                auto_plan.total_seconds * 1e6,
+                f"auto_B={auto_plan.total_bytes};"
+                f"best_single_codec={best_c}:{fixed_totals[best_c]}B;"
+                f"saved_B={fixed_totals[best_c] - auto_plan.total_bytes};"
+                + ";".join(f"{k}={v}" for k, v in sorted(picks.items())),
+            )
+        )
+    return rows
+
+
+def _equivalence_rows():
+    """codec='auto' training matches dense_allreduce round-wise."""
+    N, L, steps = 8, 256, 25
+    data = make_linreg(5, N, L, 200)
+    grad_fn = linreg_grad_fn(data)
+    rows = []
+    for S in (0.01, 0.07, 0.2):
+        cfg = SparsifierConfig(kind="regtopk", sparsity=S, mu=1.0)
+        sim = DistributedSim(
+            grad_fn, N, L, cfg, learning_rate=1e-2,
+            codec="auto", collective="auto",
+        )
+        assert sim.codec in FIXED_CODECS, (
+            f"auto resolved to lossy/unknown codec {sim.codec}"
+        )
+        ref = DistributedSim(grad_fn, N, L, cfg, learning_rate=1e-2)
+        step_a = jax.jit(sim.step_fn)
+        step_d = jax.jit(ref.step_fn)
+        state = sim.init(jnp.zeros(L))
+        err = 0.0
+        for _ in range(steps):
+            new_state, g_a = step_a(state)
+            _, g_d = step_d(state)
+            denom = max(float(jnp.linalg.norm(g_d)), 1e-30)
+            err = max(err, float(jnp.linalg.norm(g_a - g_d)) / denom)
+            state = new_state
+        assert err <= 1e-5, (
+            f"auto S={S} ({sim.codec}/{sim.resolved_collective}) diverged "
+            f"from dense_allreduce: rel err {err:.2e}"
+        )
+        rows.append(
+            row(
+                f"autotune/equiv/S={S}",
+                0.0,
+                f"pick={sim.codec}/{sim.resolved_collective};"
+                f"rel_err={err:.2e}",
+            )
+        )
+    return rows
+
+
+def _calibration_rows():
+    res = comm.run_calibration(iters=3)
+    if not res.calibrated:
+        return [
+            row("autotune/calibrate", 0.0, "skipped=single_device")
+        ]
+    m = res.model
+    # the fitted model must still induce a valid plan on every sweep point
+    from repro.core.selectors import sparsity_to_k
+
+    for label, L, S in LEAVES:
+        d = comm.choose_leaf(L, sparsity_to_k(L, S), (8,), m)
+        assert d.codec in comm.CODECS and d.collective in comm.COLLECTIVES
+    return [
+        row(
+            "autotune/calibrate",
+            res.residual * 1e6,
+            f"alpha_s={m.alpha:.3e};beta_s_per_B={m.beta:.3e};"
+            f"samples={len(res.samples)}",
+        )
+    ]
+
+
+def run():
+    return (
+        _sweep_rows()
+        + _tree_rows()
+        + _equivalence_rows()
+        + _calibration_rows()
+    )
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    print("name,us_per_call,derived")
+    emit(run())

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   fig7_mu_sweep — paper Fig. 7 (mu sensitivity; mu=0 == Top-k)
   comm_volume   — Sec. 2.2 compression table
   comm_bench    — repro.comm codec x strategy x sparsity sweep (ISSUE 1)
+  autotune_bench— per-leaf (codec x collective) planner + calibration (ISSUE 2)
   kernel_bench  — Pallas kernel microbenches
   roofline      — §Roofline terms from the dry-run artifacts
   perf_summary  — §Perf hillclimb before/after + multi-pod scaling
@@ -32,6 +33,7 @@ MODULES = [
     "fig7_mu_sweep",
     "comm_volume",
     "comm_bench",
+    "autotune_bench",
     "kernel_bench",
     "serve_bench",
     "roofline",

@@ -1,6 +1,6 @@
 """``repro.comm`` — the communication subsystem.
 
-Three layers (ISSUE 1 tentpole):
+Five layers:
 
 * :mod:`repro.comm.codec`       — wire codecs with exact bit accounting
   (``coo_fp32`` | ``coo_idx_delta`` | ``bitmap_dense`` | ``coo_q8``).
@@ -9,11 +9,18 @@ Three layers (ISSUE 1 tentpole):
   single-process reference and in-``shard_map`` form.
 * :mod:`repro.comm.cost`        — alpha–beta cost model + measured
   bytes-on-wire counters surfaced in train-step metrics.
+* :mod:`repro.comm.autotune`    — cost-model-driven per-leaf
+  (codec x collective) planning behind ``codec="auto"``.
+* :mod:`repro.comm.calibrate`   — micro-harness timing real collectives to
+  fit the :class:`AlphaBeta` link model.
 
 All gradient aggregation in :mod:`repro.core.distributed` and
 :mod:`repro.core.simulator` routes through this package, selected by
-``DistConfig.codec`` / ``DistConfig.collective``.
+``DistConfig.codec`` / ``DistConfig.collective`` ("auto" plans per leaf).
 """
+from repro.comm import autotune, calibrate
+from repro.comm.autotune import CommPlan, LeafDecision, choose_leaf, plan_tree
+from repro.comm.calibrate import Calibration, Sample, calibrate as run_calibration, fit_alpha_beta
 from repro.comm.codec import (
     CODECS,
     BitmapDense,
@@ -47,21 +54,31 @@ __all__ = [
     "BitmapDense",
     "CODECS",
     "COLLECTIVES",
+    "Calibration",
     "Codec",
     "Collective",
+    "CommPlan",
     "CooFp32",
     "CooIdxDelta",
     "CooQ8",
     "CostEstimate",
     "DenseAllreduce",
     "Hierarchical",
+    "LeafDecision",
+    "Sample",
     "SparseAllgather",
+    "autotune",
+    "calibrate",
+    "choose_leaf",
     "delta_index_dtype",
+    "fit_alpha_beta",
     "get_codec",
     "get_collective",
     "measured_bytes",
     "payload_nbytes",
+    "plan_tree",
     "predict",
     "predicted_bytes",
+    "run_calibration",
     "wire_words_per_worker",
 ]

@@ -1,0 +1,192 @@
+"""Cost-model-driven per-leaf (codec x collective) auto-planning.
+
+The paper fixes one wire format for every layer; real parameter trees are
+wildly heterogeneous — a 4-element bias shard and a 10^7-element embedding
+shard at the same sparsity S want *different* codecs (``coo_idx_delta``'s
+int8 deltas on tiny shards, ``bitmap_dense`` once S > 1/32) and different
+collectives (``hierarchical`` only pays off when a multi-axis dp mesh has
+slow outer links). This module picks, per leaf, the (codec, collective)
+pair that minimizes the alpha–beta cost model's predicted round time:
+
+    seconds = n_messages * alpha + bytes_on_wire * beta
+
+computed by :func:`repro.comm.cost.predict` from the codec's exact
+``wire_bits`` accounting and the collective's ring pattern. Selection is
+deterministic: ties break on fewer bytes, then lexicographic (codec,
+collective) names.
+
+Entry points:
+
+* :func:`choose_leaf` — one (length, k, dp_sizes) -> :class:`LeafDecision`.
+* :func:`plan_tree`   — a ``LeafPlan`` pytree -> :class:`CommPlan` with
+  per-leaf decisions plus round totals.
+
+``DistConfig.codec="auto"`` / ``collective="auto"`` route through here (see
+``repro.core.distributed.build_plan``); fixing one of the two restricts the
+candidate set to that axis. Lossy codecs (``coo_q8``) are *excluded* by
+default — auto-planning must not silently change numerics — and opt in via
+``allow_lossy=True``.
+
+Follow-up (ROADMAP): replace the default :class:`AlphaBeta` with
+backend-calibrated models per link class (NCCL vs ICI) via
+:mod:`repro.comm.calibrate`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+
+from repro.comm import cost as cost_lib
+from repro.comm.codec import CODECS, get_codec
+from repro.comm.collectives import COLLECTIVES, get_collective
+from repro.comm.cost import AlphaBeta, CostEstimate, WORD_BYTES
+
+# dense_allreduce moves the dense vector — the codec never hits the wire,
+# so one canonical codec slot represents it in the candidate set.
+DENSE_CANONICAL_CODEC = "coo_fp32"
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafDecision:
+    """The planner's pick for one leaf, with its predicted cost."""
+
+    codec: str
+    collective: str
+    cost: CostEstimate
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """Per-leaf decisions (a pytree mirroring the ``LeafPlan`` tree) plus
+    per-worker round totals under the link model that produced them."""
+
+    decisions: Any
+    total_bytes: int
+    total_messages: int
+    total_seconds: float
+    model: AlphaBeta
+
+    def flat(self):
+        return jax.tree.leaves(
+            self.decisions, is_leaf=lambda x: isinstance(x, LeafDecision)
+        )
+
+
+def candidate_pairs(
+    codecs: Optional[Sequence[str]] = None,
+    collectives: Optional[Sequence[str]] = None,
+    allow_lossy: bool = False,
+) -> Tuple[Tuple[str, str], ...]:
+    """Admissible (codec, collective) pairs for one leaf.
+
+    * ``dense_allreduce`` is codec-independent (nothing is encoded on the
+      wire): it appears once, under the canonical fp32 codec slot — or the
+      caller's single fixed codec when the codec axis is restricted, so a
+      fixed-codec candidate set still contains the dense pattern.
+    * lossy codecs are admissible only with ``allow_lossy=True`` (callers
+      set it when the user *explicitly* fixed a lossy codec).
+    * ``hierarchical`` degenerates to a dense psum on a single-axis dp mesh
+      (no inter axes); it stays admissible but can never beat
+      ``dense_allreduce`` there (identical pattern, later tie-break).
+    """
+    codec_axis_free = codecs is None
+    cnames = sorted(CODECS) if codecs is None else list(codecs)
+    snames = sorted(COLLECTIVES) if collectives is None else list(collectives)
+    pairs = []
+    for s in snames:
+        get_collective(s)  # fail fast on unknown strategy
+        if s == "dense_allreduce":
+            dc = DENSE_CANONICAL_CODEC if codec_axis_free else cnames[0]
+            get_codec(dc)  # fail fast on unknown codec
+            pairs.append((dc, s))
+            continue
+        for c in cnames:
+            codec = get_codec(c)  # fail fast on unknown codec
+            if not codec.lossless and not allow_lossy:
+                continue
+            pairs.append((c, s))
+    if not pairs:
+        raise ValueError(
+            "no admissible (codec, collective) pairs: codecs="
+            f"{cnames} collectives={snames} allow_lossy={allow_lossy}"
+        )
+    return tuple(pairs)
+
+
+def choose_leaf(
+    length: int,
+    k: int,
+    dp_sizes: Sequence[int],
+    model: AlphaBeta = AlphaBeta(),
+    *,
+    codecs: Optional[Sequence[str]] = None,
+    collectives: Optional[Sequence[str]] = None,
+    allow_lossy: bool = False,
+    word_bytes: int = WORD_BYTES,
+) -> LeafDecision:
+    """Score every admissible pair with ``cost.predict``; return the argmin.
+
+    Ordering is total and deterministic: (seconds, bytes, codec, collective).
+
+    ``word_bytes`` sizes the ``dense_allreduce`` wire (the sparsified dense
+    psum carries the state dtype — 2 for bf16). Payload strategies always
+    decode to f32 before any intra-axis psum (see ``Hierarchical.shard``),
+    so their dense terms stay at 4-byte words — the same split
+    ``distributed.comm_round_bytes`` accounts with.
+    """
+    best = None
+    for cname, sname in candidate_pairs(codecs, collectives, allow_lossy):
+        wb = word_bytes if sname == "dense_allreduce" else WORD_BYTES
+        est = cost_lib.predict(
+            cname, sname, length, k, dp_sizes, model, wb
+        )
+        key = (est.seconds, est.bytes_on_wire, cname, sname)
+        if best is None or key < best[0]:
+            best = (key, LeafDecision(cname, sname, est))
+    return best[1]
+
+
+def plan_tree(
+    plan: Any,
+    dp_sizes: Sequence[int],
+    model: AlphaBeta = AlphaBeta(),
+    *,
+    codecs: Optional[Sequence[str]] = None,
+    collectives: Optional[Sequence[str]] = None,
+    allow_lossy: bool = False,
+    word_bytes: int = WORD_BYTES,
+) -> CommPlan:
+    """Plan every leaf of a ``LeafPlan`` pytree (``repro.core.distributed``).
+
+    Each leaf is planned on its *local* shard length and k — the shapes the
+    payload actually has inside ``shard_map``.
+    """
+    from repro.core.distributed import LeafPlan  # cycle-free at call time
+
+    def mk(p: LeafPlan) -> LeafDecision:
+        return choose_leaf(
+            p.local_len,
+            p.k,
+            dp_sizes,
+            model,
+            codecs=codecs,
+            collectives=collectives,
+            allow_lossy=allow_lossy,
+            word_bytes=word_bytes,
+        )
+
+    decisions = jax.tree.map(
+        mk, plan, is_leaf=lambda x: isinstance(x, LeafPlan)
+    )
+    flat = jax.tree.leaves(
+        decisions, is_leaf=lambda x: isinstance(x, LeafDecision)
+    )
+    return CommPlan(
+        decisions=decisions,
+        total_bytes=sum(d.cost.bytes_on_wire for d in flat),
+        total_messages=sum(d.cost.n_messages for d in flat),
+        total_seconds=sum(d.cost.seconds for d in flat),
+        model=model,
+    )

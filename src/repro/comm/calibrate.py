@@ -1,0 +1,200 @@
+"""Micro-calibration: time real collectives, fit the AlphaBeta link model.
+
+The planner (:mod:`repro.comm.autotune`) is only as good as its alpha/beta.
+This module probes the *actual* backend with raw collectives — a psum of a
+dense [L] vector and an all_gather of a B-byte buffer over the dp axes —
+at a geometric ladder of sizes, then least-squares fits
+
+    seconds = n_messages * alpha + bytes_on_wire * beta
+
+over the measured (n_messages, bytes_on_wire, seconds) samples, where the
+message/byte counts come from the same ring patterns the cost model scores
+(:func:`repro.comm.cost._pattern`). ``calibrate()`` is the one-call entry:
+it builds a dp mesh over the available devices and returns a fitted
+:class:`AlphaBeta` plus the raw samples; on a single device there is no
+wire to probe and it falls back to the default model (``calibrated=False``).
+
+Caveats (by design — this is a micro-harness, not a benchmark suite):
+timings include shard_map dispatch overhead, so alpha absorbs the launch
+cost; per-backend NCCL/ICI calibration with isolated link classes is the
+ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.comm.cost import AlphaBeta, _pattern
+from repro.compat import make_mesh, shard_map
+
+DEFAULT_LENGTHS = (1 << 12, 1 << 14, 1 << 16, 1 << 18)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """One timed collective: the fit's (features, target) row."""
+
+    collective: str
+    length: int
+    n_messages: int
+    bytes_on_wire: int
+    seconds: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    model: AlphaBeta
+    samples: Tuple[Sample, ...]
+    calibrated: bool
+    residual: float  # RMS of the fit, seconds
+
+
+def fit_alpha_beta(
+    samples: Sequence[Sample],
+    floor_alpha: float = 1e-9,
+    floor_beta: float = 1e-14,
+) -> AlphaBeta:
+    """Non-negative least squares (clamped) over the sample rows."""
+    if not samples:
+        raise ValueError("cannot fit AlphaBeta from zero samples")
+    A = np.array(
+        [[s.n_messages, s.bytes_on_wire] for s in samples], np.float64
+    )
+    t = np.array([s.seconds for s in samples], np.float64)
+    x, *_ = np.linalg.lstsq(A, t, rcond=None)
+    alpha, beta = float(x[0]), float(x[1])
+    # a negative coefficient means the other term explains everything at
+    # these sizes; clamp and refit the remaining term alone.
+    if alpha < floor_alpha and beta < floor_beta:
+        return AlphaBeta(alpha=floor_alpha, beta=floor_beta)
+    if alpha < floor_alpha:
+        beta = max(float(t @ A[:, 1] / (A[:, 1] @ A[:, 1])), floor_beta)
+        return AlphaBeta(alpha=floor_alpha, beta=beta)
+    if beta < floor_beta:
+        alpha = max(float(t @ A[:, 0] / (A[:, 0] @ A[:, 0])), floor_alpha)
+        return AlphaBeta(alpha=alpha, beta=floor_beta)
+    return AlphaBeta(alpha=alpha, beta=beta)
+
+
+def _time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def time_collective(
+    mesh,
+    dp_axes: Sequence[str],
+    length: int,
+    collective: str = "dense_allreduce",
+    word_bytes: int = 4,
+    iters: int = 5,
+) -> Sample:
+    """Time one real collective over the mesh's dp axes.
+
+    ``dense_allreduce`` psums a dense float32 [L]; ``sparse_allgather``
+    all_gathers a ``length``-word buffer (the payload stand-in — the wire
+    doesn't care what the words mean).
+    """
+    dp = tuple(dp_axes)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    W = int(np.prod([mesh.shape[a] for a in dp]))
+
+    if collective == "dense_allreduce":
+
+        def body(x):  # x local [1, L]
+            return jax.lax.psum(x, dp)
+
+        out_spec = P(None, None)
+        payload_bytes = 0.0  # dense term carries the bytes
+    elif collective == "sparse_allgather":
+
+        def body(x):  # x local [1, L] -> gathered [W, L], reduced locally
+            g = x
+            for ax in dp:
+                g = jax.lax.all_gather(g, ax)
+            return g.reshape(-1, x.shape[-1]).sum(axis=0, keepdims=True)
+
+        out_spec = P(None, None)
+        payload_bytes = length * word_bytes
+    else:
+        raise ValueError(
+            f"calibration probe for {collective!r} not implemented; "
+            "use 'dense_allreduce' or 'sparse_allgather'"
+        )
+
+    f = jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=P(dp_spec, None),
+            out_specs=out_spec,
+            check_vma=False,
+        )
+    )
+    x = jnp.ones((W, length), jnp.float32)
+    secs = _time_call(f, x, iters=iters)
+    dp_sizes = [mesh.shape[a] for a in dp]
+    by, msgs = _pattern(collective, length, payload_bytes, dp_sizes, word_bytes)
+    return Sample(
+        collective=collective,
+        length=length,
+        n_messages=msgs,
+        bytes_on_wire=int(np.ceil(by)),
+        seconds=secs,
+    )
+
+
+def calibrate(
+    mesh=None,
+    dp_axes: Optional[Sequence[str]] = None,
+    lengths: Sequence[int] = DEFAULT_LENGTHS,
+    collectives: Sequence[str] = ("dense_allreduce", "sparse_allgather"),
+    iters: int = 5,
+) -> Calibration:
+    """Probe the backend and fit AlphaBeta. A dp group of fewer than two
+    workers (single device, or a caller mesh with dp size 1) has no wire to
+    probe: every sample row would be (0 messages, 0 bytes) and the fit
+    degenerates to the clamp floors — fall back to the default model."""
+    if mesh is None:
+        n = len(jax.devices())
+        if n >= 2:
+            mesh = make_mesh((n,), ("data",))
+            dp_axes = ("data",)
+    dp_axes = tuple(dp_axes or ("data",))
+    n_dp = (
+        int(np.prod([mesh.shape[a] for a in dp_axes])) if mesh is not None
+        else 1
+    )
+    if n_dp < 2:
+        return Calibration(
+            model=AlphaBeta(), samples=(), calibrated=False, residual=0.0
+        )
+    samples: List[Sample] = []
+    for coll in collectives:
+        for L in lengths:
+            samples.append(
+                time_collective(mesh, dp_axes, L, coll, iters=iters)
+            )
+    model = fit_alpha_beta(samples)
+    pred = np.array(
+        [s.n_messages * model.alpha + s.bytes_on_wire * model.beta
+         for s in samples]
+    )
+    meas = np.array([s.seconds for s in samples])
+    rms = float(np.sqrt(np.mean((pred - meas) ** 2)))
+    return Calibration(
+        model=model, samples=tuple(samples), calibrated=True, residual=rms
+    )

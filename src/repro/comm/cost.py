@@ -126,10 +126,11 @@ def predict(
     k: int,
     dp_sizes: Sequence[int],
     model: AlphaBeta = AlphaBeta(),
+    word_bytes: int = WORD_BYTES,
 ) -> CostEstimate:
     c = get_codec(codec) if isinstance(codec, str) else codec
     pb = math.ceil(int(c.wire_bits(length, k)) / 8)
-    by, msgs = _pattern(collective, length, pb, dp_sizes)
+    by, msgs = _pattern(collective, length, pb, dp_sizes, word_bytes)
     return CostEstimate(
         bytes_on_wire=math.ceil(by),
         n_messages=msgs,

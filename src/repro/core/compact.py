@@ -26,6 +26,7 @@ from typing import Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import selectors as sel_lib
 from repro.core.sparsify import SparsifierConfig
 
 
@@ -70,20 +71,33 @@ def compact_select(
     if cfg.kind == "topk":
         score = amag
     elif cfg.kind == "regtopk":
+        # Remark-4 prior exponent: the selection metric is |a|^y * reg. The
+        # exponent must be applied *before* the sent-coordinate
+        # regularization so sent scores are mag^y * reg, matching
+        # RegTopK._score (t == 0 is plain Top-k — Alg. 2 line 2).
+        mag = amag if cfg.y == 1.0 else amag**cfg.y
         # dense default: unsent coords carry likelihood C = tanh(Q/mu) -> 1
-        score = amag
         denom = cfg.omega * a[st.sent_idx]
         safe = jnp.where(denom == 0, 1.0, denom)
         delta = (st.sent_g - cfg.omega * st.sent_vals) / safe
         reg = jnp.tanh(jnp.abs(1.0 + delta) / cfg.mu)
-        sent_score = amag[st.sent_idx] * reg
+        sent_score = mag[st.sent_idx] * reg
         score = jnp.where(
-            st.t == 0, score, score.at[st.sent_idx].set(sent_score)
+            st.t == 0, amag, mag.at[st.sent_idx].set(sent_score)
         )
     else:
         raise ValueError(f"unsupported compact kind {cfg.kind!r}")
-    _, idx = jax.lax.top_k(score, k)
-    return a, a[idx], idx
+    if cfg.selector == "exact":
+        _, idx = jax.lax.top_k(score, k)
+        return a, a[idx], idx
+    if cfg.selector == "threshold":
+        mask = sel_lib.threshold_topk_mask(score, k)
+        vals, idx = sel_lib.mask_to_payload(mask, a, k)
+        return a, vals, idx
+    raise ValueError(
+        f"compact_select does not support selector {cfg.selector!r}; "
+        "available: 'exact', 'threshold'"
+    )
 
 
 def compact_finalize(

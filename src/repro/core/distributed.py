@@ -21,6 +21,11 @@ The paper's communication pattern, mapped to a TPU mesh (DESIGN.md §2):
 
 Per-(leaf x model-shard) top-k budgets (k = ceil(S * local_len)) follow
 DGC/ScaleCom layer-wise practice; see DESIGN.md §Assumption-changes.
+
+Wire formats and collectives are chosen *per leaf*: ``LeafPlan`` carries an
+optional (codec, collective) pair, filled by the alpha–beta planner
+(:mod:`repro.comm.autotune`) when ``DistConfig.codec`` / ``.collective`` is
+``"auto"``, and falling back to the global ``DistConfig`` choice otherwise.
 """
 from __future__ import annotations
 
@@ -52,12 +57,15 @@ class DistConfig:
     )
     optimizer: OptConfig = OptConfig(kind="adam", learning_rate=1e-4)
     aggregation: str = "sparse_allgather"  # legacy alias for ``collective``
-    codec: str = "coo_fp32"  # repro.comm wire codec for payload collectives
-    collective: Optional[str] = None  # repro.comm strategy; None -> aggregation
+    codec: str = "coo_fp32"  # repro.comm wire codec, or "auto" (per-leaf)
+    collective: Optional[str] = None  # repro.comm strategy, "auto", or None
     microbatches: int = 1
     dp_axes: Tuple[str, ...] = ("data",)
     state_dtype: str = "float32"  # eps dtype ("bfloat16" for the big archs)
     rules: Optional[Dict[str, Optional[str]]] = None
+    # alpha-beta link model driving codec/collective="auto" planning; None
+    # uses comm.AlphaBeta() defaults (see comm.calibrate to fit one).
+    link_model: Optional[comm.AlphaBeta] = None
 
     def resolved_collective(self) -> str:
         return self.collective or self.aggregation
@@ -69,10 +77,28 @@ class LeafPlan(NamedTuple):
     local_len: int
     k: int
     spec: P
+    # per-leaf wire choices; None defers to DistConfig's global setting.
+    # build_plan(..., dist=...) fills them when codec/collective is "auto".
+    codec: Optional[str] = None
+    collective: Optional[str] = None
 
 
 def _is_plan(x):
     return isinstance(x, LeafPlan)
+
+
+def leaf_wire(p: LeafPlan, dist: DistConfig) -> Tuple[str, str]:
+    """Resolve one leaf's (codec, collective): the leaf's own plan entry
+    wins; otherwise the global DistConfig choice. "auto" must have been
+    resolved at plan-build time (``build_plan(..., dist=...)``)."""
+    codec = p.codec or dist.codec
+    coll = p.collective or dist.resolved_collective()
+    if codec == "auto" or coll == "auto":
+        raise ValueError(
+            "codec/collective='auto' requires a plan built with "
+            "build_plan(..., dist=dist) so per-leaf choices are resolved"
+        )
+    return codec, coll
 
 
 def _local_shape(shape, spec: P, mesh) -> Tuple[int, ...]:
@@ -88,14 +114,57 @@ def _local_shape(shape, spec: P, mesh) -> Tuple[int, ...]:
     return tuple(out)
 
 
-def build_plan(params_shape, specs, mesh, sparsity: float):
-    """Per-leaf static sparsification plan."""
+def build_plan(params_shape, specs, mesh, sparsity: float,
+               dist: Optional[DistConfig] = None):
+    """Per-leaf static sparsification plan.
+
+    With ``dist`` given and ``dist.codec`` / ``dist.collective`` set to
+    ``"auto"``, each leaf additionally gets a (codec, collective) pair
+    picked by the alpha–beta planner (:mod:`repro.comm.autotune`) on the
+    leaf's *local* shard length — tiny biases and dense-ish embedding
+    shards end up on different wire formats. Fixed (non-"auto") choices
+    leave the leaf fields ``None`` (global resolution via ``leaf_wire``).
+    """
+    from repro.comm import autotune
+
+    auto = dist is not None and (
+        dist.codec == "auto" or (dist.collective or "") == "auto"
+    )
+    if auto:
+        dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
+        model = dist.link_model or comm.AlphaBeta()
+        word_bytes = jnp.dtype(_DT[dist.state_dtype]).itemsize
+        codecs = None if dist.codec == "auto" else [dist.codec]
+        if dist.sparsifier.kind in ("none", "hard_threshold"):
+            # no fixed-k payload exists: a *free* collective axis can only
+            # resolve to the dense wire. An explicitly requested payload
+            # collective is kept — downstream guards own that error.
+            collectives = (
+                ["dense_allreduce"] if dist.collective == "auto"
+                else [dist.resolved_collective()]
+            )
+        else:
+            collectives = (
+                None if dist.collective == "auto"
+                else [dist.resolved_collective()]
+            )
+        # a free codec axis stays lossless (auto must not change numerics);
+        # an explicitly-fixed lossy codec is the user's call.
+        allow_lossy = dist.codec != "auto"
 
     def mk(leaf, spec):
         ls = _local_shape(leaf.shape, spec, mesh)
         ll = int(np.prod(ls)) if ls else 1
+        k = sparsity_to_k(ll, sparsity)
+        if not auto:
+            return LeafPlan(tuple(leaf.shape), ls, ll, k, spec)
+        d = autotune.choose_leaf(
+            ll, k, dp_sizes, model,
+            codecs=codecs, collectives=collectives,
+            allow_lossy=allow_lossy, word_bytes=word_bytes,
+        )
         return LeafPlan(
-            tuple(leaf.shape), ls, ll, sparsity_to_k(ll, sparsity), spec
+            tuple(leaf.shape), ls, ll, k, spec, d.codec, d.collective
         )
 
     return jax.tree.map(mk, params_shape, specs)
@@ -204,16 +273,22 @@ def make_sparsify_aggregate(
     dp_spec = dp if len(dp) > 1 else dp[0]
     scfg = dataclasses.replace(dist.sparsifier, omega=1.0 / n_workers)
     plan_flat, plan_def = jax.tree.flatten(plan, is_leaf=_is_plan)
-    codec = comm.get_codec(dist.codec)
-    collective = dist.resolved_collective()
-    comm.get_collective(collective)  # fail fast on unknown strategy
+    # per-leaf wire choices (one global pair when the plan carries none);
+    # resolve + validate every distinct pair up front — fail fast.
+    wires = [leaf_wire(p, dist) for p in plan_flat]
+    for cname, sname in set(wires):
+        comm.get_codec(cname)
+        comm.get_collective(sname)
+    leaf_codecs = [comm.get_codec(c) for c, _ in wires]
 
     def body(grads, state):
         g_flat = plan_def.flatten_up_to(grads)
         s_flat = plan_def.flatten_up_to(state)
         outs = [
-            _spa_leaf(g, s, p, scfg, codec, collective, dp)
-            for g, s, p in zip(g_flat, s_flat, plan_flat)
+            _spa_leaf(g, s, p, scfg, codec, sname, dp)
+            for g, s, p, codec, (_, sname) in zip(
+                g_flat, s_flat, plan_flat, leaf_codecs, wires
+            )
         ]
         agg = jax.tree.unflatten(plan_def, [o[0] for o in outs])
         new_state = jax.tree.unflatten(plan_def, [o[1] for o in outs])
@@ -234,15 +309,11 @@ def make_sparsify_aggregate(
 # ---------------------------------------------------------------------------
 def comm_round_bytes(plan, dist: DistConfig, mesh) -> Tuple[int, int]:
     """(predicted, measured) bytes-on-wire per worker per round, summed over
-    leaves. Predicted comes from the codec's bit accounting; measured from
-    the actual encoded buffer shapes (via ``jax.eval_shape`` — exact, since
-    payload shapes are static)."""
-    codec = comm.get_codec(dist.codec)
-    collective = dist.resolved_collective()
+    leaves — each with its *own* (codec, collective) when the plan carries
+    per-leaf choices. Predicted comes from the codec's bit accounting;
+    measured from the actual encoded buffer shapes (via ``jax.eval_shape``
+    — exact, since payload shapes are static)."""
     dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
-    dense_wire = dist.sparsifier.kind == "none" or (
-        collective == "dense_allreduce"
-    )
     # the sparsified dense psum carries the state-dtype vector (bf16 halves
     # it); the kind="none" pmean upcasts to f32 first (see _spa_leaf).
     dense_word = (
@@ -252,6 +323,11 @@ def comm_round_bytes(plan, dist: DistConfig, mesh) -> Tuple[int, int]:
     )
     pred = meas = 0
     for p in jax.tree.leaves(plan, is_leaf=_is_plan):
+        cname, collective = leaf_wire(p, dist)
+        codec = comm.get_codec(cname)
+        dense_wire = dist.sparsifier.kind == "none" or (
+            collective == "dense_allreduce"
+        )
         if dense_wire:
             pred += comm.predicted_bytes(
                 codec,
@@ -274,6 +350,8 @@ def comm_round_bytes(plan, dist: DistConfig, mesh) -> Tuple[int, int]:
                 jax.ShapeDtypeStruct((p.k,), jnp.float32),
                 jax.ShapeDtypeStruct((p.k,), jnp.int32),
             )
+            # payload strategies decode to f32 before any intra-axis psum
+            # (hierarchical), so their dense term stays 4-byte words.
             pred += comm.predicted_bytes(
                 codec, collective, p.local_len, p.k, dp_sizes
             )
@@ -396,7 +474,7 @@ def assemble(model_mod, cfg: ModelConfig, dist: DistConfig, mesh) -> Assembled:
         params_shape, axes, mesh, rules=dist.rules, dp_axes=dist.dp_axes
     )
     plan = build_plan(
-        params_shape, param_specs, mesh, dist.sparsifier.sparsity
+        params_shape, param_specs, mesh, dist.sparsifier.sparsity, dist
     )
     W = int(np.prod([mesh.shape[a] for a in dist.dp_axes]))
     state_shapes, state_specs = sparsifier_state_shapes(

@@ -17,6 +17,7 @@ Two families:
 from __future__ import annotations
 
 import functools
+import math
 from typing import Tuple
 
 import jax
@@ -67,7 +68,11 @@ def threshold_topk_mask(
 
     lo, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
     # count(score >= lo) >= k; possibly > k on ties / unconverged bisection.
-    return (score >= lo).astype(score.dtype)
+    # When the bisection collapses to tau = 0 (all-zero score, or fewer than
+    # k positive entries) ``score >= 0`` would select *everything*; a zero
+    # score carries no gradient, so exclude it — the mask cardinality stays
+    # <= max(k, ties at tau) instead of blowing up to L.
+    return ((score >= lo) & (score > 0)).astype(score.dtype)
 
 
 def fixed_k_payload(
@@ -119,6 +124,14 @@ def get_selector(name: str):
 
 
 def sparsity_to_k(length: int, sparsity: float) -> int:
-    """Paper's S = k/J; returns k = ceil(S * J), clipped to [1, J]."""
-    k = int(-(-sparsity * length // 1))  # ceil
+    """Paper's S = k/J; returns k = ceil(S * J), clipped to [1, J].
+
+    The ceil is epsilon-tolerant: ``S * J`` is computed in binary floating
+    point, so nominally-integer products land a few ulps above the integer
+    (``0.07 * 100 == 7.000000000000001``) and a naive ceil inflates k by one
+    — inflating the compression ratio the paper defines as S = k/J.
+    """
+    target = sparsity * length
+    eps = 1e-9 * max(1.0, abs(target))
+    k = math.ceil(target - eps)
     return max(1, min(length, k))

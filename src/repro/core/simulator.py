@@ -47,8 +47,9 @@ class DistributedSim:
     sparsifier_cfg: SparsifierConfig
     learning_rate: float = 1e-2
     aggregation: str = "dense_allreduce"  # legacy alias for ``collective``
-    codec: str = "coo_fp32"  # repro.comm wire codec for payload collectives
-    collective: Optional[str] = None  # repro.comm strategy; None -> aggregation
+    codec: str = "coo_fp32"  # repro.comm wire codec, or "auto"
+    collective: Optional[str] = None  # repro.comm strategy, "auto", or None
+    link_model: Optional[comm.AlphaBeta] = None  # drives "auto" planning
 
     def __post_init__(self):
         # uniform server weights omega_n = 1/N (paper's arithmetic mean);
@@ -56,6 +57,38 @@ class DistributedSim:
         cfg = dataclasses.replace(self.sparsifier_cfg, omega=1.0 / self.n_workers)
         self.sparsifier: Sparsifier = make_sparsifier(cfg)
         self.weights = jnp.full((self.n_workers,), 1.0 / self.n_workers)
+        if self.codec == "auto" or self.resolved_collective == "auto":
+            # single-leaf mirror of distributed.build_plan's auto planning
+            from repro.comm import autotune
+
+            codecs = None if self.codec == "auto" else [self.codec]
+            if cfg.kind in ("none", "hard_threshold"):
+                # no fixed-k payload exists: a *free* collective axis can
+                # only resolve to the dense wire. An explicitly requested
+                # payload collective is left alone so the hard_threshold
+                # guard below raises instead of silently overriding it.
+                colls = (
+                    ["dense_allreduce"]
+                    if self.resolved_collective == "auto"
+                    else [self.resolved_collective]
+                )
+            else:
+                colls = (
+                    None if self.resolved_collective == "auto"
+                    else [self.resolved_collective]
+                )
+            d = autotune.choose_leaf(
+                self.length,
+                sel_lib.sparsity_to_k(self.length, cfg.sparsity),
+                (self.n_workers,),
+                self.link_model or comm.AlphaBeta(),
+                codecs=codecs,
+                collectives=colls,
+                allow_lossy=self.codec != "auto",
+            )
+            if self.codec == "auto":
+                self.codec = d.codec
+            self.collective, self.aggregation = d.collective, d.collective
         coll = self.resolved_collective
         self._codec = comm.get_codec(self.codec)
         self._strategy = comm.get_collective(coll)

@@ -35,8 +35,12 @@ def _tile(x: jax.Array) -> Tuple[jax.Array, int]:
     return flat.reshape(-1, LANES), n
 
 
-@functools.partial(jax.jit, static_argnames=("omega", "mu", "q", "interpret"))
-def regtopk_score(a, a_prev, s_prev, g_prev, *, omega, mu, q=1e9, interpret=None):
+@functools.partial(
+    jax.jit, static_argnames=("omega", "mu", "q", "y", "interpret")
+)
+def regtopk_score(
+    a, a_prev, s_prev, g_prev, *, omega, mu, q=1e9, y=1.0, interpret=None
+):
     """Fused Alg.2 score over an arbitrary-shape gradient tensor."""
     interp = (not _on_tpu()) if interpret is None else interpret
     at, n = _tile(a.astype(jnp.float32))
@@ -44,7 +48,7 @@ def regtopk_score(a, a_prev, s_prev, g_prev, *, omega, mu, q=1e9, interpret=None
     st, _ = _tile(s_prev.astype(jnp.float32))
     gt, _ = _tile(g_prev.astype(jnp.float32))
     out = _rs.regtopk_score(
-        at, pt, st, gt, omega=omega, mu=mu, q=q, interpret=interp
+        at, pt, st, gt, omega=omega, mu=mu, q=q, y=y, interpret=interp
     )
     return out.reshape(-1)[:n].reshape(a.shape)
 

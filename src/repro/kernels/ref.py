@@ -7,12 +7,15 @@ import jax
 import jax.numpy as jnp
 
 
-def regtopk_score_ref(a, a_prev, s_prev, g_prev, *, omega, mu, q=1e9):
+def regtopk_score_ref(a, a_prev, s_prev, g_prev, *, omega, mu, q=1e9, y=1.0):
     denom = omega * a
     safe = jnp.where(denom == 0.0, 1.0, denom)
     delta_sent = (g_prev - omega * a_prev) / safe
     delta = jnp.where(s_prev > 0.0, delta_sent, q)
-    return jnp.abs(a) * jnp.tanh(jnp.abs(1.0 + delta) / mu)
+    mag = jnp.abs(a)
+    if y != 1.0:
+        mag = mag**y
+    return mag * jnp.tanh(jnp.abs(1.0 + delta) / mu)
 
 
 def count_above_ref(score, tau):
@@ -34,7 +37,7 @@ def threshold_topk_mask_ref(score, k, n_iters=24):
         return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
 
     lo, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
-    return (score >= lo).astype(score.dtype)
+    return ((score >= lo) & (score > 0)).astype(score.dtype)
 
 
 def block_topk_candidates_ref(score, m=8) -> Tuple[jax.Array, jax.Array]:

@@ -3,7 +3,7 @@
 The selection metric (paper Alg. 2 lines 8–9)
 
     Delta = s_prev * (g_prev - omega * a_prev) / (omega * a) + Q (1 - s_prev)
-    score = |a| * tanh(|1 + Delta| / mu)
+    score = |a|^y * tanh(|1 + Delta| / mu)     (y = 1 fast path skips the pow)
 
 is a 4-input elementwise chain over the J-sized gradient — purely
 memory-bound. Unfused, XLA:CPU-style execution would stream ~9 J-sized
@@ -26,7 +26,9 @@ SUBLANES = 8
 BLOCK = (SUBLANES, LANES)
 
 
-def _score_kernel(a_ref, a_prev_ref, s_prev_ref, g_prev_ref, out_ref, *, omega, mu, q):
+def _score_kernel(
+    a_ref, a_prev_ref, s_prev_ref, g_prev_ref, out_ref, *, omega, mu, q, y
+):
     a = a_ref[...]
     a_prev = a_prev_ref[...]
     s_prev = s_prev_ref[...]
@@ -36,7 +38,10 @@ def _score_kernel(a_ref, a_prev_ref, s_prev_ref, g_prev_ref, out_ref, *, omega, 
     delta_sent = (g_prev - omega * a_prev) / safe
     delta = jnp.where(s_prev > 0.0, delta_sent, q)
     reg = jnp.tanh(jnp.abs(1.0 + delta) / mu)
-    out_ref[...] = jnp.abs(a) * reg
+    mag = jnp.abs(a)
+    if y != 1.0:  # compile-time constant: the y == 1 fast path skips the pow
+        mag = mag**y
+    out_ref[...] = mag * reg
 
 
 def regtopk_score(
@@ -48,9 +53,15 @@ def regtopk_score(
     omega: float,
     mu: float,
     q: float = 1e9,
+    y: float = 1.0,
     interpret: bool = False,
 ) -> jax.Array:
-    """All inputs [rows, 1024] float32; returns the score, same shape."""
+    """All inputs [rows, 1024] float32; returns the score, same shape.
+
+    ``y`` is the Remark-4 prior exponent (compile-time constant; the
+    selection metric is ``|a|^y * tanh(|1 + Delta| / mu)``, matching
+    ``RegTopK._score``).
+    """
     rows, lanes = a.shape
     if lanes != LANES:
         raise ValueError(f"expected lane dim {LANES}, got {lanes}")
@@ -58,7 +69,7 @@ def regtopk_score(
         raise ValueError(f"rows must be a multiple of {SUBLANES}")
     grid = (rows // SUBLANES,)
     spec = pl.BlockSpec(BLOCK, lambda i: (i, 0))
-    kernel = functools.partial(_score_kernel, omega=omega, mu=mu, q=q)
+    kernel = functools.partial(_score_kernel, omega=omega, mu=mu, q=q, y=y)
     return pl.pallas_call(
         kernel,
         grid=grid,

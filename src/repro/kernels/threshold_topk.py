@@ -103,4 +103,7 @@ def threshold_topk_mask(
         return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
 
     lo, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
-    return (score >= lo).astype(score.dtype)
+    # zero scores carry no gradient and are never selected — keeps the
+    # all-zero-score round from collapsing to an all-ones mask (matches
+    # the selectors.threshold_topk_mask fix).
+    return ((score >= lo) & (score > 0)).astype(score.dtype)

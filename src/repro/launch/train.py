@@ -44,10 +44,14 @@ def main():
                     help="legacy alias for --collective")
     ap.add_argument("--codec", default="coo_fp32",
                     choices=["coo_fp32", "coo_idx_delta", "bitmap_dense",
-                             "coo_q8"])
+                             "coo_q8", "auto"],
+                    help="'auto' plans per leaf via the alpha-beta model")
     ap.add_argument("--collective", default=None,
                     choices=["dense_allreduce", "sparse_allgather",
-                             "hierarchical"])
+                             "hierarchical", "auto"])
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the alpha-beta link model from real "
+                         "collectives before auto-planning")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default="host", choices=["host", "production"])
@@ -72,6 +76,21 @@ def main():
     if args.global_batch % W:
         raise SystemExit(f"--global-batch must be divisible by {W} workers")
 
+    link_model = None
+    if args.calibrate:
+        from repro.comm import calibrate as cal
+
+        res = cal.calibrate(mesh=mesh, dp_axes=dp_axes)
+        link_model = res.model
+        print(
+            f"calibrated alpha={link_model.alpha:.3e} s/msg "
+            f"beta={link_model.beta:.3e} s/B "
+            f"(rms {res.residual:.2e}s over {len(res.samples)} probes)"
+            if res.calibrated
+            else "calibration skipped (single device); using defaults",
+            flush=True,
+        )
+
     dist = DistConfig(
         sparsifier=SparsifierConfig(
             kind=args.sparsifier, sparsity=args.sparsity, mu=args.mu
@@ -82,6 +101,7 @@ def main():
         collective=args.collective,
         microbatches=args.microbatches,
         dp_axes=dp_axes,
+        link_model=link_model,
     )
     mod = get_family(cfg)
     asm = assemble(mod, cfg, dist, mesh)
@@ -110,6 +130,19 @@ def main():
         f"(predicted {pred_b / 1e6:.3f} MB)",
         flush=True,
     )
+    if dist.codec == "auto" or dist.resolved_collective() == "auto":
+        from collections import Counter
+
+        from repro.core.distributed import LeafPlan, leaf_wire
+
+        picks = Counter(
+            leaf_wire(p, dist)
+            for p in jax.tree.leaves(
+                asm.plan, is_leaf=lambda x: isinstance(x, LeafPlan)
+            )
+        )
+        for (c, s), n in sorted(picks.items()):
+            print(f"comm:   auto-plan {c}/{s}: {n} leaves", flush=True)
     t0 = time.time()
     with mesh:
         for t in range(start, start + args.steps):

@@ -36,10 +36,15 @@ def run_sub(code: str, devices: int = 8) -> dict:
 # ---------------------------------------------------------------------------
 # compact-state equivalence with the dense simulator algebra
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("kind", ["topk", "regtopk"])
-def test_compact_matches_dense_state(kind):
+@pytest.mark.parametrize(
+    "kind,y",
+    [("topk", 1.0), ("regtopk", 1.0), ("regtopk", 0.5), ("regtopk", 2.0)],
+)
+def test_compact_matches_dense_state(kind, y):
+    """Dense <-> compact equivalence, including the Remark-4 prior exponent
+    (regression: compact_select silently ignored cfg.y)."""
     L, k, steps = 64, 8, 5
-    cfg = SparsifierConfig(kind=kind, sparsity=k / L, mu=1.5, omega=0.1)
+    cfg = SparsifierConfig(kind=kind, sparsity=k / L, mu=1.5, omega=0.1, y=y)
     from repro.core.compact import compact_init, reference_step
 
     st = compact_init(L, k)
@@ -58,6 +63,56 @@ def test_compact_matches_dense_state(kind):
         agg = 0.1 * ghat  # arbitrary aggregate
         st = compact_finalize(st, a, vals, idx, agg)
         g_prev_dense = agg
+
+
+def test_compact_threshold_selector_routes_not_drops():
+    """Regression: compact_select ignored SparsifierConfig.selector — the
+    distributed runtime always ran exact top-k whatever the config said.
+    selector='threshold' must route through the bisection mask +
+    mask_to_payload (same selected set when the mask has no ties), and
+    unknown selectors must raise, not silently fall back."""
+    import dataclasses
+
+    from repro.core.compact import compact_init
+
+    L, k = 64, 8
+    key = jax.random.PRNGKey(3)
+    g = jax.random.normal(key, (L,))
+    cfg = SparsifierConfig(kind="regtopk", sparsity=k / L, mu=1.5, omega=0.1)
+    st = compact_init(L, k)
+    a_e, v_e, i_e = compact_select(cfg, st, g, k)
+    a_t, v_t, i_t = compact_select(
+        dataclasses.replace(cfg, selector="threshold"), st, g, k
+    )
+    np.testing.assert_allclose(np.asarray(a_t), np.asarray(a_e))
+    # same coordinate set (payload order may differ)
+    assert set(np.asarray(i_t).tolist()) == set(np.asarray(i_e).tolist())
+    dense_e = np.zeros(L)
+    dense_e[np.asarray(i_e)] = np.asarray(v_e)
+    dense_t = np.zeros(L)
+    dense_t[np.asarray(i_t)] = np.asarray(v_t)
+    np.testing.assert_allclose(dense_t, dense_e, rtol=1e-6)
+    with pytest.raises(ValueError, match="selector"):
+        compact_select(
+            dataclasses.replace(cfg, selector="bogus"), st, g, k
+        )
+
+
+def test_compact_zero_gradient_round_threshold_selector():
+    """A zero gradient round with the threshold selector must produce an
+    all-(0, 0) payload (scatter no-op), not ship the whole vector."""
+    import dataclasses
+
+    from repro.core.compact import compact_init
+
+    L, k = 32, 4
+    cfg = SparsifierConfig(
+        kind="regtopk", sparsity=k / L, selector="threshold"
+    )
+    st = compact_init(L, k)
+    a, vals, idx = compact_select(cfg, st, jnp.zeros(L), k)
+    np.testing.assert_array_equal(np.asarray(vals), 0.0)
+    np.testing.assert_array_equal(np.asarray(idx), 0)
 
 
 def test_compact_cyclic_covers_all_coordinates():

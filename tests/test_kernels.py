@@ -74,6 +74,42 @@ def test_regtopk_score_matches_dense_sparsifier_scoring():
                                rtol=1e-4, atol=1e-6)
 
 
+@pytest.mark.parametrize("y", [0.5, 1.0, 2.0])
+def test_regtopk_score_y_exponent_matches_dense(y):
+    """Contract: the kernel must match RegTopK._score — including the
+    Remark-4 prior exponent y (regression: the kernel ignored y)."""
+    from repro.core.sparsify import SparsifierConfig, SparsifierState, RegTopK
+
+    n = 8192  # 8 x 1024 tiles for the raw-kernel comparison below
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    a, a_prev, g_prev = (_rand(k, (n,)) for k in ks[:3])
+    s_prev = (jax.random.uniform(ks[3], (n,)) > 0.5).astype(jnp.float32)
+    cfg = SparsifierConfig(kind="regtopk", mu=1.5, omega=0.25, y=y)
+    sp = RegTopK(cfg)
+    st_ = SparsifierState(eps=jnp.zeros(n), a_prev=a_prev, s_prev=s_prev,
+                          t=jnp.ones((), jnp.int32))
+    want = sp._score(st_, a, g_prev)
+    got = ops.regtopk_score(a, a_prev, s_prev, g_prev, omega=0.25, mu=1.5,
+                            y=y, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+    # the raw kernel agrees with the y-aware jnp oracle too
+    raw = raw_score(
+        _tile_like(a), _tile_like(a_prev), _tile_like(s_prev),
+        _tile_like(g_prev), omega=0.25, mu=1.5, y=y, interpret=True,
+    )
+    oracle = ref.regtopk_score_ref(
+        _tile_like(a), _tile_like(a_prev), _tile_like(s_prev),
+        _tile_like(g_prev), omega=0.25, mu=1.5, y=y,
+    )
+    np.testing.assert_allclose(np.asarray(raw), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-6)
+
+
+def _tile_like(x):
+    return x.reshape(-1, 1024)
+
+
 # ---------------------------------------------------------------------------
 # threshold_topk
 # ---------------------------------------------------------------------------
@@ -114,6 +150,17 @@ def test_block_topk_candidates_match_ref(shape, m):
     rvals, ridx = ref.block_topk_candidates_ref(score, m=m)
     np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+def test_threshold_topk_zero_score_kernel_matches_selector_fix():
+    """Kernel parity with the selectors.threshold_topk_mask zero-score fix:
+    an all-zero score (or zero padding slots) must never be selected."""
+    m = ops.threshold_topk_mask(jnp.zeros((8192,)), 16, interpret=True)
+    assert float(np.asarray(m).sum()) == 0.0
+    # fewer positives than k: only the positives come back
+    score = jnp.zeros((8192,)).at[jnp.array([5, 900])].set(3.0)
+    m2 = np.asarray(ops.threshold_topk_mask(score, 16, interpret=True))
+    np.testing.assert_array_equal(np.nonzero(m2)[0], [5, 900])
 
 
 def test_hierarchical_topk_exact_when_k_small():

@@ -68,15 +68,30 @@ def test_threshold_topk_superset_of_k(vals, k):
     score = jnp.asarray(vals, jnp.float32)
     k = min(k, score.shape[0])
     m = np.asarray(threshold_topk_mask(score, k, n_iters=30))
-    # bisection invariant: at least k selected, and the selected set contains
-    # the exact top-k (threshold <= k-th largest value)
-    assert int(m.sum()) >= k
-    exact = np.asarray(exact_topk_mask(score, k))
-    # any exactly-selected index with score strictly above the threshold set
-    # must also be threshold-selected: check via score comparison
-    sel_scores = np.asarray(score)[m > 0]
-    kth = np.sort(np.asarray(score))[-k]
-    assert sel_scores.min() <= kth + 1e-6
+    # bisection invariant: at least min(k, #positive) selected (zero scores
+    # carry no gradient and are never selected — see the zero-round test),
+    # and the selected set contains the exact positive top-k (threshold <=
+    # k-th largest value)
+    n_pos = int((np.asarray(score) > 0).sum())
+    assert int(m.sum()) >= min(k, n_pos)
+    assert not np.any(np.asarray(score)[m > 0] == 0.0)
+    # threshold <= k-th largest (meaningful only when k positives exist)
+    if n_pos >= k:
+        kth = np.sort(np.asarray(score))[-k]
+        assert np.asarray(score)[m > 0].min() <= kth + 1e-6
+
+
+def test_threshold_topk_zero_gradient_round():
+    """Regression: an all-zero score collapsed the bisection to tau = 0 and
+    ``score >= 0`` selected *every* coordinate — a zero gradient round
+    would ship the whole (zero) vector. Cardinality must stay
+    <= max(k, ties): here 0, and min(k, #positive) when a few coordinates
+    are live."""
+    assert float(threshold_topk_mask(jnp.zeros(64), 8).sum()) == 0.0
+    # fewer positives than k: select exactly the positives, nothing else
+    score = jnp.zeros(64).at[jnp.array([3, 17])].set(jnp.array([2.0, 5.0]))
+    m = np.asarray(threshold_topk_mask(score, 8))
+    np.testing.assert_array_equal(np.nonzero(m)[0], [3, 17])
 
 
 def test_threshold_matches_exact_when_distinct():
@@ -108,6 +123,50 @@ def test_sparsity_to_k():
     assert sparsity_to_k(100, 1.0) == 100
     assert sparsity_to_k(100, 0.0) == 1  # floor at 1
     assert sparsity_to_k(10, 0.5) == 5
+
+
+def test_sparsity_to_k_float_ceil_regression():
+    """S * J computed in binary floating point lands ulps above the exact
+    integer product (0.07 * 100 == 7.000000000000001); a naive ceil then
+    inflates k — and with it the paper's compression ratio S = k/J
+    (regression: sparsity_to_k(100, 0.07) returned 8)."""
+    assert sparsity_to_k(100, 0.07) == 7
+    # exhaustive S x J sweep over the paper's grid + decimal fractions:
+    # k must equal the exact ceil of the rational product
+    import fractions
+
+    grid_S = (0.1, 0.01, 0.001, 0.07, 0.02, 0.05, 0.2, 0.5, 0.3)
+    grid_J = (10, 100, 1000, 4096, 65536, 100_000)
+    for S in grid_S:
+        frac = fractions.Fraction(str(S))
+        for J in grid_J:
+            exact = max(1, min(J, -((-frac * J) // 1)))
+            assert sparsity_to_k(J, S) == exact, (S, J)
+
+
+def test_sparsity_to_k_shifts_leaf_plan_and_wire_bytes():
+    """The off-by-one propagated into LeafPlan.k and the byte accounting:
+    at S=0.07, J=100 each coo_fp32 payload is 8 B/coordinate — one
+    phantom coordinate per leaf per gather hop."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro import comm
+    from repro.core.distributed import (
+        DistConfig,
+        build_plan,
+        comm_round_bytes,
+    )
+
+    class _Mesh:
+        shape = {"data": 4}
+
+    shapes = {"w": jax.ShapeDtypeStruct((100,), jnp.float32)}
+    plan = build_plan(shapes, {"w": P(None)}, _Mesh(), 0.07)
+    assert plan["w"].k == 7
+    dist = DistConfig(codec="coo_fp32", collective="sparse_allgather")
+    pred, meas = comm_round_bytes(plan, dist, _Mesh())
+    # (N-1) gather hops x k coordinates x 8 B — not k=8's 192 B
+    assert pred == meas == 3 * 7 * 8
 
 
 # ---------------------------------------------------------------------------
