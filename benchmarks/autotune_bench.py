@@ -11,8 +11,15 @@ For a grid of leaves (tiny bias .. dense-ish embedding shard) and dp meshes
 
 Also runs the :mod:`repro.comm.calibrate` micro-harness: times real
 collectives on the host backend (forced to 8 CPU devices when launched
-directly), fits alpha/beta, and reports the fitted model plus the plan it
-induces — the NCCL/ICI per-backend version is the ROADMAP follow-up.
+directly), fits alpha/beta — uniform *and* per-axis (``calibrate_topo`` on
+a (2, 4) dp mesh) — and reports the fitted models plus the plans they
+induce.
+
+The ``topo/`` section asserts the ISSUE-3 tentpole: under a per-axis
+:class:`~repro.comm.cost.LinkTopo` with a >=10x slower outer axis the
+planner flips large moderately-sparse leaves to ``hierarchical`` (which a
+uniform model provably never strictly prefers), while a uniform LinkTopo
+reproduces the scalar AlphaBeta predictions bit-for-bit.
 """
 from __future__ import annotations
 
@@ -182,6 +189,63 @@ def _equivalence_rows():
     return rows
 
 
+def _topo_rows():
+    """Per-link-class planning: uniform parity + the hierarchical flip."""
+    from repro.core.selectors import sparsity_to_k
+
+    rows = []
+    # 1) a uniform LinkTopo is bit-for-bit the scalar AlphaBeta model
+    scalar = comm.AlphaBeta(alpha=2e-5, beta=3e-11)
+    for label, L, S in LEAVES:
+        k = sparsity_to_k(L, S)
+        for dp in MESHES:
+            topo = comm.LinkTopo.uniform(scalar, len(dp))
+            for c in FIXED_CODECS:
+                for s in sorted(comm.COLLECTIVES):
+                    u = comm.predict(c, s, L, k, dp, scalar)
+                    t = comm.predict(c, s, L, k, dp, topo)
+                    assert u == t, (
+                        f"uniform-topo parity broke: {c}/{s} {label} dp={dp}"
+                        f" {u} != {t}"
+                    )
+    # 2) slow outer axis (10x alpha and beta) flips big moderately-sparse
+    # leaves to hierarchical. On *bytes* a uniform bandwidth-only model
+    # (alpha=0) provably never strictly prefers it (docs/comm.md envelope
+    # proof) — the per-axis beta is what unlocks the choice.
+    inter_link = comm.AlphaBeta(alpha=1e-5, beta=1e-10)
+    intra_link = comm.AlphaBeta(alpha=1e-6, beta=1e-11)
+    for dp in ((2, 4), (4, 8)):
+        topo = comm.LinkTopo(
+            (inter_link,) * (len(dp) - 1) + (intra_link,)
+        )
+        L, S = 1_000_000, 0.1
+        k = sparsity_to_k(L, S)
+        het = comm.choose_leaf(L, k, dp, topo)
+        uni = comm.choose_leaf(
+            L, k, dp, comm.AlphaBeta(alpha=0.0, beta=intra_link.beta)
+        )
+        assert het.collective == "hierarchical", (
+            f"dp={dp}: slow-outer topo picked {het.collective}, "
+            "expected hierarchical"
+        )
+        assert uni.collective != "hierarchical", (
+            f"dp={dp}: uniform bandwidth-only model picked hierarchical"
+        )
+        saved = comm.predict(
+            het.codec, "sparse_allgather", L, k, dp, topo
+        ).seconds - het.cost.seconds
+        rows.append(
+            row(
+                f"autotune/topo/dp={'x'.join(map(str, dp))}",
+                het.cost.seconds * 1e6,
+                f"pick={het.codec}/{het.collective};"
+                f"uniform_pick={uni.codec}/{uni.collective};"
+                f"saved_vs_allgather_us={saved * 1e6:.1f}",
+            )
+        )
+    return rows
+
+
 def _calibration_rows():
     res = comm.run_calibration(iters=3)
     if not res.calibrated:
@@ -205,12 +269,38 @@ def _calibration_rows():
     ]
 
 
+def _topo_calibration_rows():
+    """Per-axis calibration on a (2, 4) host mesh: fit one AlphaBeta per dp
+    axis, check the topo it assembles still plans every sweep point."""
+    import numpy as np
+
+    from repro.compat import make_mesh
+    from repro.core.selectors import sparsity_to_k
+
+    if len(jax.devices()) < 8:
+        return [row("autotune/calibrate_topo", 0.0, "skipped=few_devices")]
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    res = comm.calibrate_topo(mesh=mesh, dp_axes=("pod", "data"), iters=3)
+    assert res.calibrated and res.topo.n_axes == 2
+    for label, L, S in LEAVES:
+        d = comm.choose_leaf(L, sparsity_to_k(L, S), (2, 4), res.topo)
+        assert d.codec in comm.CODECS and d.collective in comm.COLLECTIVES
+    per = ";".join(
+        f"{ax}:alpha={c.model.alpha:.3e},beta={c.model.beta:.3e}"
+        for ax, c in zip(res.axes, res.per_axis)
+    )
+    rms = float(np.mean([c.residual for c in res.per_axis]))
+    return [row("autotune/calibrate_topo", rms * 1e6, per)]
+
+
 def run():
     return (
         _sweep_rows()
         + _tree_rows()
+        + _topo_rows()
         + _equivalence_rows()
         + _calibration_rows()
+        + _topo_calibration_rows()
     )
 
 

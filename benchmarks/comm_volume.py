@@ -1,7 +1,9 @@
 """Communication-volume table (paper Sec. 2.2: S ~= k/J compression).
 
 Per-round, per-worker wire volume for each architecture's J at the assigned
-sparsities: the legacy words table (dense vs fp32-COO allgather) plus the
+sparsities: the words table (dense vs fp32-COO allgather, derived from the
+codec's exact ``wire_bits`` — the migration off the deprecated
+``cost.wire_words_per_worker`` is documented in ``docs/comm.md``) plus the
 ``repro.comm`` codec bytes through the alpha–beta cost model — the quantity
 the paper's technique actually reduces. Cross-checked against the dry-run
 HLO collective bytes in EXPERIMENTS.md; the codec x strategy numerics sweep
@@ -13,13 +15,13 @@ from benchmarks.common import row
 from benchmarks.roofline import count_params
 from repro import comm
 from repro import configs as cfglib
-from repro.core import wire_words_per_worker
 
 N_WORKERS = 16
 
 
 def run():
     rows = []
+    coo = comm.get_codec("coo_fp32")
     for arch in sorted(cfglib.ARCHS):
         if arch == "paper-resnet-proxy":
             continue
@@ -27,8 +29,10 @@ def run():
         J = int(count_params(cfg)["total"])
         for S in (0.01, 0.001):
             k = max(1, int(S * J))
-            dense = wire_words_per_worker("dense_allreduce", J, k, N_WORKERS)
-            sparse = wire_words_per_worker("sparse_allgather", J, k, N_WORKERS)
+            # uplink words/worker: dense sends the J-vector; the fp32-COO
+            # allgather moves every worker's 2k-word payload (N·64k bits).
+            dense = J
+            sparse = N_WORKERS * int(coo.wire_bits(J, k)) // 32
             codec_bytes = ";".join(
                 f"{name}_B={comm.predicted_bytes(name, 'sparse_allgather', J, k, (N_WORKERS,))}"
                 for name in sorted(comm.CODECS)

@@ -7,12 +7,18 @@ Five layers:
 * :mod:`repro.comm.collectives` — aggregation strategies over payloads
   (``dense_allreduce`` | ``sparse_allgather`` | ``hierarchical``), each in
   single-process reference and in-``shard_map`` form.
-* :mod:`repro.comm.cost`        — alpha–beta cost model + measured
+* :mod:`repro.comm.cost`        — alpha–beta cost model (scalar
+  :class:`AlphaBeta` or per-mesh-axis :class:`LinkTopo`) + measured
   bytes-on-wire counters surfaced in train-step metrics.
 * :mod:`repro.comm.autotune`    — cost-model-driven per-leaf
   (codec x collective) planning behind ``codec="auto"``.
 * :mod:`repro.comm.calibrate`   — micro-harness timing real collectives to
-  fit the :class:`AlphaBeta` link model.
+  fit :class:`AlphaBeta` (uniform) or a per-axis :class:`LinkTopo`
+  (``calibrate_topo``).
+
+See ``docs/comm.md`` for wire-format bit layouts, the collective ring
+patterns, and the cost-model math (including why a uniform link model can
+never strictly prefer ``hierarchical``).
 
 All gradient aggregation in :mod:`repro.core.distributed` and
 :mod:`repro.core.simulator` routes through this package, selected by
@@ -20,7 +26,14 @@ All gradient aggregation in :mod:`repro.core.distributed` and
 """
 from repro.comm import autotune, calibrate
 from repro.comm.autotune import CommPlan, LeafDecision, choose_leaf, plan_tree
-from repro.comm.calibrate import Calibration, Sample, calibrate as run_calibration, fit_alpha_beta
+from repro.comm.calibrate import (
+    Calibration,
+    Sample,
+    TopoCalibration,
+    calibrate as run_calibration,
+    calibrate_topo,
+    fit_alpha_beta,
+)
 from repro.comm.codec import (
     CODECS,
     BitmapDense,
@@ -42,7 +55,12 @@ from repro.comm.collectives import (
 from repro.comm.cost import (
     AlphaBeta,
     CostEstimate,
+    LinkModel,
+    LinkTopo,
+    as_topo,
     measured_bytes,
+    parse_link_topo,
+    pattern_axes,
     payload_nbytes,
     predict,
     predicted_bytes,
@@ -65,16 +83,23 @@ __all__ = [
     "DenseAllreduce",
     "Hierarchical",
     "LeafDecision",
+    "LinkModel",
+    "LinkTopo",
     "Sample",
     "SparseAllgather",
+    "TopoCalibration",
+    "as_topo",
     "autotune",
     "calibrate",
+    "calibrate_topo",
     "choose_leaf",
     "delta_index_dtype",
     "fit_alpha_beta",
     "get_codec",
     "get_collective",
     "measured_bytes",
+    "parse_link_topo",
+    "pattern_axes",
     "payload_nbytes",
     "plan_tree",
     "predict",

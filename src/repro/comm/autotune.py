@@ -27,9 +27,15 @@ candidate set to that axis. Lossy codecs (``coo_q8``) are *excluded* by
 default — auto-planning must not silently change numerics — and opt in via
 ``allow_lossy=True``.
 
-Follow-up (ROADMAP): replace the default :class:`AlphaBeta` with
-backend-calibrated models per link class (NCCL vs ICI) via
-:mod:`repro.comm.calibrate`.
+``model`` accepts either a scalar :class:`AlphaBeta` (every link identical)
+or a per-mesh-axis :class:`LinkTopo` (one link class per dp axis, outermost
+first — e.g. slow inter-node NICs over fast intra-node ICI). The topology
+is what makes ``hierarchical`` plannable at all: under any *uniform* model
+with ``alpha == 0`` its byte cost sits exactly on the
+``min(dense_allreduce, sparse_allgather)`` envelope and is never strictly
+preferred (proof in ``docs/comm.md``); with a slow outer axis it wins
+outright. Fit topologies from real collectives with
+:func:`repro.comm.calibrate.calibrate_topo`.
 """
 from __future__ import annotations
 
@@ -41,7 +47,14 @@ import jax
 from repro.comm import cost as cost_lib
 from repro.comm.codec import CODECS, get_codec
 from repro.comm.collectives import COLLECTIVES, get_collective
-from repro.comm.cost import AlphaBeta, CostEstimate, WORD_BYTES
+from repro.comm.cost import (
+    AlphaBeta,
+    CostEstimate,
+    LinkModel,
+    LinkTopo,
+    WORD_BYTES,
+    as_topo,
+)
 
 # dense_allreduce moves the dense vector — the codec never hits the wire,
 # so one canonical codec slot represents it in the candidate set.
@@ -60,13 +73,15 @@ class LeafDecision:
 @dataclasses.dataclass(frozen=True)
 class CommPlan:
     """Per-leaf decisions (a pytree mirroring the ``LeafPlan`` tree) plus
-    per-worker round totals under the link model that produced them."""
+    per-worker round totals under the link model that produced them.
+    ``model`` is the :class:`LinkTopo` the planner actually scored with
+    (scalar :class:`AlphaBeta` inputs are normalized to a uniform topo)."""
 
     decisions: Any
     total_bytes: int
     total_messages: int
     total_seconds: float
-    model: AlphaBeta
+    model: LinkTopo
 
     def flat(self):
         return jax.tree.leaves(
@@ -90,6 +105,12 @@ def candidate_pairs(
     * ``hierarchical`` degenerates to a dense psum on a single-axis dp mesh
       (no inter axes); it stays admissible but can never beat
       ``dense_allreduce`` there (identical pattern, later tie-break).
+
+    >>> candidate_pairs(codecs=["bitmap_dense"],
+    ...                 collectives=["sparse_allgather"])
+    (('bitmap_dense', 'sparse_allgather'),)
+    >>> any(c == "coo_q8" for c, _ in candidate_pairs())
+    False
     """
     codec_axis_free = codecs is None
     cnames = sorted(CODECS) if codecs is None else list(codecs)
@@ -119,7 +140,7 @@ def choose_leaf(
     length: int,
     k: int,
     dp_sizes: Sequence[int],
-    model: AlphaBeta = AlphaBeta(),
+    model: LinkModel = AlphaBeta(),
     *,
     codecs: Optional[Sequence[str]] = None,
     collectives: Optional[Sequence[str]] = None,
@@ -130,12 +151,26 @@ def choose_leaf(
 
     Ordering is total and deterministic: (seconds, bytes, codec, collective).
 
+    ``model`` is a scalar :class:`AlphaBeta` or a per-axis
+    :class:`LinkTopo` (length must equal ``len(dp_sizes)``).
+
     ``word_bytes`` sizes the ``dense_allreduce`` wire (the sparsified dense
     psum carries the state dtype — 2 for bf16). Payload strategies always
     decode to f32 before any intra-axis psum (see ``Hierarchical.shard``),
     so their dense terms stay at 4-byte words — the same split
     ``distributed.comm_round_bytes`` accounts with.
+
+    A tiny shard rides delta-encoded COO indices; a slow outer axis flips a
+    big, moderately sparse shard to ``hierarchical``:
+
+    >>> choose_leaf(64, 2, (8,)).codec
+    'coo_idx_delta'
+    >>> slow_outer = LinkTopo((AlphaBeta(1e-5, 1e-10),
+    ...                        AlphaBeta(1e-6, 1e-11)))
+    >>> choose_leaf(10**6, 10**5, (2, 4), slow_outer).collective
+    'hierarchical'
     """
+    model = as_topo(model, max(len(list(dp_sizes)), 1))
     best = None
     for cname, sname in candidate_pairs(codecs, collectives, allow_lossy):
         wb = word_bytes if sname == "dense_allreduce" else WORD_BYTES
@@ -151,7 +186,7 @@ def choose_leaf(
 def plan_tree(
     plan: Any,
     dp_sizes: Sequence[int],
-    model: AlphaBeta = AlphaBeta(),
+    model: LinkModel = AlphaBeta(),
     *,
     codecs: Optional[Sequence[str]] = None,
     collectives: Optional[Sequence[str]] = None,
@@ -161,9 +196,22 @@ def plan_tree(
     """Plan every leaf of a ``LeafPlan`` pytree (``repro.core.distributed``).
 
     Each leaf is planned on its *local* shard length and k — the shapes the
-    payload actually has inside ``shard_map``.
+    payload actually has inside ``shard_map``. ``model`` follows
+    :func:`choose_leaf` (scalar :class:`AlphaBeta` or per-axis
+    :class:`LinkTopo`); the returned :class:`CommPlan` carries the
+    normalized topology.
+
+    >>> from jax.sharding import PartitionSpec as P
+    >>> from repro.core.distributed import LeafPlan
+    >>> tree = {"bias": LeafPlan((64,), (64,), 64, 4, P(None)),
+    ...         "embed": LeafPlan((65536,), (65536,), 65536, 8192, P(None))}
+    >>> cp = plan_tree(tree, (8,))
+    >>> cp.decisions["bias"].codec, cp.decisions["embed"].codec
+    ('coo_idx_delta', 'bitmap_dense')
     """
     from repro.core.distributed import LeafPlan  # cycle-free at call time
+
+    model = as_topo(model, max(len(list(dp_sizes)), 1))
 
     def mk(p: LeafPlan) -> LeafDecision:
         return choose_leaf(

@@ -1,4 +1,4 @@
-"""Micro-calibration: time real collectives, fit the AlphaBeta link model.
+"""Micro-calibration: time real collectives, fit alpha–beta link models.
 
 The planner (:mod:`repro.comm.autotune`) is only as good as its alpha/beta.
 This module probes the *actual* backend with raw collectives — a psum of a
@@ -9,15 +9,22 @@ at a geometric ladder of sizes, then least-squares fits
 
 over the measured (n_messages, bytes_on_wire, seconds) samples, where the
 message/byte counts come from the same ring patterns the cost model scores
-(:func:`repro.comm.cost._pattern`). ``calibrate()`` is the one-call entry:
-it builds a dp mesh over the available devices and returns a fitted
-:class:`AlphaBeta` plus the raw samples; on a single device there is no
-wire to probe and it falls back to the default model (``calibrated=False``).
+(:func:`repro.comm.cost._pattern`). Two entry points:
+
+* ``calibrate()`` — one :class:`AlphaBeta` for the whole dp group: builds a
+  dp mesh over the available devices and returns the fitted model plus the
+  raw samples; on a single device there is no wire to probe and it falls
+  back to the default model (``calibrated=False``).
+* ``calibrate_topo()`` — one :class:`AlphaBeta` *per dp mesh axis*: probes
+  collectives along each axis separately (the other axes stay idle), so an
+  intra-node NVLink/ICI axis and an inter-node NIC axis each get their own
+  fit. The result's :class:`~repro.comm.cost.LinkTopo` drops straight into
+  ``DistConfig.link_topo`` / the planner's ``model=`` argument.
 
 Caveats (by design — this is a micro-harness, not a benchmark suite):
 timings include shard_map dispatch overhead, so alpha absorbs the launch
-cost; per-backend NCCL/ICI calibration with isolated link classes is the
-ROADMAP follow-up.
+cost, and per-axis probes time each link class under an otherwise-idle
+mesh (no congestion between classes).
 """
 from __future__ import annotations
 
@@ -30,10 +37,28 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.comm.cost import AlphaBeta, _pattern
+from repro.comm.cost import AlphaBeta, LinkTopo, _pattern
 from repro.compat import make_mesh, shard_map
 
 DEFAULT_LENGTHS = (1 << 12, 1 << 14, 1 << 16, 1 << 18)
+
+
+def _resolve_mesh(mesh, dp_axes):
+    """Default mesh/axes discovery shared by the calibrate entry points:
+    with no mesh, probe all local devices on one ("data",) axis. A caller
+    supplying ``dp_axes`` without the mesh that defines them is ambiguous
+    — refuse rather than silently probing a different topology."""
+    if mesh is None:
+        if dp_axes is not None:
+            raise ValueError(
+                "dp_axes without a mesh is ambiguous: pass the mesh whose "
+                f"axes {tuple(dp_axes)} should be probed"
+            )
+        n = len(jax.devices())
+        if n >= 2:
+            mesh = make_mesh((n,), ("data",))
+        return mesh, ("data",)
+    return mesh, tuple(dp_axes or ("data",))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,12 +80,36 @@ class Calibration:
     residual: float  # RMS of the fit, seconds
 
 
+@dataclasses.dataclass(frozen=True)
+class TopoCalibration:
+    """Per-axis calibrations plus the :class:`LinkTopo` they assemble into.
+
+    ``axes`` names the dp mesh axes (outermost first); ``per_axis[i]`` is
+    that axis's own :class:`Calibration` (``calibrated=False`` for size-1
+    axes, which have no wire to probe). ``calibrated`` is True when at
+    least one axis was actually timed.
+    """
+
+    topo: LinkTopo
+    per_axis: Tuple[Calibration, ...]
+    axes: Tuple[str, ...]
+    calibrated: bool
+
+
 def fit_alpha_beta(
     samples: Sequence[Sample],
     floor_alpha: float = 1e-9,
     floor_beta: float = 1e-14,
 ) -> AlphaBeta:
-    """Non-negative least squares (clamped) over the sample rows."""
+    """Non-negative least squares (clamped) over the sample rows.
+
+    >>> rows = [Sample("probe", i, m, b, m * 2e-5 + b * 3e-10)
+    ...         for i, (m, b) in enumerate([(7, 1000), (14, 100000),
+    ...                                     (3, 5000000)])]
+    >>> fit = fit_alpha_beta(rows)
+    >>> round(fit.alpha, 9), round(fit.beta, 14)
+    (2e-05, 3e-10)
+    """
     if not samples:
         raise ValueError("cannot fit AlphaBeta from zero samples")
     A = np.array(
@@ -107,6 +156,10 @@ def time_collective(
     ``dense_allreduce`` psums a dense float32 [L]; ``sparse_allgather``
     all_gathers a ``length``-word buffer (the payload stand-in — the wire
     doesn't care what the words mean).
+
+    >>> s = time_collective(mesh, ("data",), 4096)  # doctest: +SKIP
+    >>> s.n_messages  # 2·(N-1) ring steps          # doctest: +SKIP
+    14
     """
     dp = tuple(dp_axes)
     dp_spec = dp if len(dp) > 1 else dp[0]
@@ -167,13 +220,14 @@ def calibrate(
     """Probe the backend and fit AlphaBeta. A dp group of fewer than two
     workers (single device, or a caller mesh with dp size 1) has no wire to
     probe: every sample row would be (0 messages, 0 bytes) and the fit
-    degenerates to the clamp floors — fall back to the default model."""
-    if mesh is None:
-        n = len(jax.devices())
-        if n >= 2:
-            mesh = make_mesh((n,), ("data",))
-            dp_axes = ("data",)
-    dp_axes = tuple(dp_axes or ("data",))
+    degenerates to the clamp floors — fall back to the default model.
+
+    >>> from repro.compat import make_mesh
+    >>> res = calibrate(mesh=make_mesh((1,), ("data",)), dp_axes=("data",))
+    >>> res.calibrated, res.model == AlphaBeta()
+    (False, True)
+    """
+    mesh, dp_axes = _resolve_mesh(mesh, dp_axes)
     n_dp = (
         int(np.prod([mesh.shape[a] for a in dp_axes])) if mesh is not None
         else 1
@@ -197,4 +251,57 @@ def calibrate(
     rms = float(np.sqrt(np.mean((pred - meas) ** 2)))
     return Calibration(
         model=model, samples=tuple(samples), calibrated=True, residual=rms
+    )
+
+
+def calibrate_topo(
+    mesh=None,
+    dp_axes: Optional[Sequence[str]] = None,
+    lengths: Sequence[int] = DEFAULT_LENGTHS,
+    collectives: Sequence[str] = ("dense_allreduce", "sparse_allgather"),
+    iters: int = 5,
+) -> TopoCalibration:
+    """Fit one :class:`AlphaBeta` *per dp mesh axis* by timing collectives
+    along each axis separately (the other axes sit idle), assembling a
+    :class:`~repro.comm.cost.LinkTopo` ordered like ``dp_axes`` (outermost
+    first). Size-1 axes have no wire to probe and keep the default model
+    with ``calibrated=False`` in their per-axis entry.
+
+    With no mesh given, mirrors :func:`calibrate`'s device discovery: all
+    local devices on one ``("data",)`` axis — per-axis calibration then
+    degenerates to the uniform fit. Pass the real training mesh (e.g.
+    ``("pod", "data")``) to resolve distinct link classes.
+
+    >>> from repro.compat import make_mesh
+    >>> res = calibrate_topo(mesh=make_mesh((1, 1), ("pod", "data")),
+    ...                      dp_axes=("pod", "data"))
+    >>> res.calibrated, res.topo.n_axes
+    (False, 2)
+    """
+    mesh, dp_axes = _resolve_mesh(mesh, dp_axes)
+    per_axis: List[Calibration] = []
+    for ax in dp_axes:
+        size = mesh.shape[ax] if mesh is not None else 1
+        if size < 2:
+            per_axis.append(
+                Calibration(
+                    model=AlphaBeta(), samples=(), calibrated=False,
+                    residual=0.0,
+                )
+            )
+            continue
+        per_axis.append(
+            calibrate(
+                mesh=mesh,
+                dp_axes=(ax,),
+                lengths=lengths,
+                collectives=collectives,
+                iters=iters,
+            )
+        )
+    return TopoCalibration(
+        topo=LinkTopo(tuple(c.model for c in per_axis)),
+        per_axis=tuple(per_axis),
+        axes=dp_axes,
+        calibrated=any(c.calibrated for c in per_axis),
     )

@@ -89,7 +89,15 @@ class CooFp32(Codec):
 
 def delta_index_dtype(length: int):
     """Static dtype for sorted-index deltas: every delta (and the leading
-    absolute index) is < ``length``, so the choice depends only on L."""
+    absolute index) is < ``length``, so the choice depends only on L.
+
+    >>> delta_index_dtype(100) is jnp.int8
+    True
+    >>> delta_index_dtype(1 << 14) is jnp.int16
+    True
+    >>> delta_index_dtype(1 << 20) is jnp.int32
+    True
+    """
     if length < 2**7:
         return jnp.int8
     if length < 2**15:
@@ -205,6 +213,16 @@ CODECS = {
 
 
 def get_codec(name: str) -> Codec:
+    """Look up a registered codec by name.
+
+    >>> get_codec("bitmap_dense").wire_bits(1024, 16)  # L + 32·k bits
+    1536
+    >>> get_codec("bogus")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown codec 'bogus'; available: ['bitmap_dense', \
+'coo_fp32', 'coo_idx_delta', 'coo_q8']
+    """
     try:
         return CODECS[name]
     except KeyError:

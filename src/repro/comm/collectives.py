@@ -167,14 +167,27 @@ COLLECTIVES = {
 # legacy in-shard_map helpers — formerly ``repro.core.aggregate``.
 # ---------------------------------------------------------------------------
 def dense_mean(ghat_stack: jax.Array, weights: jax.Array) -> jax.Array:
-    """``ghat_stack``: [N, L]; ``weights``: [N] (omega_n, sum to 1)."""
+    """``ghat_stack``: [N, L]; ``weights``: [N] (omega_n, sum to 1).
+
+    >>> import jax.numpy as jnp
+    >>> g = jnp.array([[2.0, 0.0], [0.0, 4.0]])
+    >>> dense_mean(g, jnp.array([0.5, 0.5])).tolist()
+    [1.0, 2.0]
+    """
     return jnp.einsum("n,nl->l", weights, ghat_stack)
 
 
 def scatter_add_payloads(
     vals: jax.Array, idx: jax.Array, weights: jax.Array, length: int
 ) -> jax.Array:
-    """``vals``/``idx``: [N, k]; returns the weighted dense sum, [L]."""
+    """``vals``/``idx``: [N, k]; returns the weighted dense sum, [L].
+
+    >>> import jax.numpy as jnp
+    >>> vals = jnp.array([[2.0], [4.0]])
+    >>> idx = jnp.array([[1], [1]])
+    >>> scatter_add_payloads(vals, idx, jnp.array([0.5, 0.5]), 3).tolist()
+    [0.0, 3.0, 0.0]
+    """
     flat_vals = (weights[:, None] * vals).reshape(-1)
     flat_idx = idx.reshape(-1)
     return jnp.zeros((length,), vals.dtype).at[flat_idx].add(flat_vals)
@@ -183,7 +196,12 @@ def scatter_add_payloads(
 def allreduce_dense(
     ghat: jax.Array, axis_names: Sequence[str], weight: jax.Array | float
 ) -> jax.Array:
-    """Weighted dense allreduce over the dp axes (uncompressed pattern)."""
+    """Weighted dense allreduce over the dp axes (uncompressed pattern).
+
+    Callable only inside ``shard_map`` (named-axis psum):
+
+    >>> agg = allreduce_dense(ghat, ("data",), 1.0 / 8)  # doctest: +SKIP
+    """
     return jax.lax.psum(ghat * weight, tuple(axis_names))
 
 
@@ -195,7 +213,12 @@ def allgather_scatter(
     weight: jax.Array | float,
 ) -> jax.Array:
     """Compressed aggregation with the fp32 COO wire format — equivalent to
-    ``SparseAllgather().shard(get_codec("coo_fp32"), ...)``."""
+    ``SparseAllgather().shard(get_codec("coo_fp32"), ...)``.
+
+    Callable only inside ``shard_map`` (named-axis all_gather):
+
+    >>> agg = allgather_scatter(vals, idx, L, ("data",), w)  # doctest: +SKIP
+    """
     from repro.comm.codec import get_codec
 
     payload = get_codec("coo_fp32").encode(vals, idx, length)
@@ -205,6 +228,16 @@ def allgather_scatter(
 
 
 def get_collective(name: str) -> Collective:
+    """Look up a registered collective strategy by name.
+
+    >>> get_collective("hierarchical").name
+    'hierarchical'
+    >>> get_collective("bogus")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown collective 'bogus'; available: ['dense_allreduce', \
+'hierarchical', 'sparse_allgather']
+    """
     try:
         return COLLECTIVES[name]
     except KeyError:

@@ -1,4 +1,4 @@
-"""Communication cost accounting: alpha–beta model + measured bytes.
+"""Communication cost accounting: per-link-class alpha–beta model + measured bytes.
 
 Two views of every round, per (codec, collective, mesh):
 
@@ -19,12 +19,34 @@ Patterns (per-worker, per-round, ring realizations):
   bytes received, ``N-1`` messages.
 * ``hierarchical``     — allgather over the inter axes (``(B-1)·payload``)
   + dense ring allreduce over the intra axis (``2·(A-1)/A·L·word``).
+
+Link models — scalar and per-link-class:
+
+* :class:`AlphaBeta` — one (alpha, beta) for every link in the mesh.
+* :class:`LinkTopo`  — one :class:`AlphaBeta` *per dp mesh axis*, ordered
+  outermost (slowest) first, matching the repo's mesh convention
+  (``dp_axes=("pod", "data")``: inter-pod NICs then intra-pod ICI).
+
+Per-axis attribution (:func:`pattern_axes`): every collective decomposes
+into per-axis (bytes, messages) contributions summing exactly to the flat
+pattern, and ``seconds = sum_axis msgs_a * alpha_a + bytes_a * beta_a``. A
+ring that spans *several* axes at once (``dense_allreduce`` and
+``sparse_allgather`` over a multi-axis dp group) is synchronous: every step
+is gated by the slowest link it crosses, which under the outermost-first
+ordering is the outermost axis *with more than one worker* — so flat
+stages charge that axis (size-1 axes carry no traffic and price nothing),
+while ``hierarchical``'s intra stage runs (and is priced) on the
+innermost axis alone. With a uniform :class:`LinkTopo` this reproduces the
+scalar :class:`AlphaBeta` predictions bit-for-bit; with a slow outer axis
+it is what makes ``hierarchical`` strictly preferable at all (see
+``docs/comm.md`` for the uniform-model impossibility proof).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+import warnings
+from typing import Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -39,10 +61,83 @@ class AlphaBeta:
     """Classic LogP-style link model: ``alpha`` s/message, ``beta`` s/byte.
 
     Defaults approximate a datacenter NIC: 10 us latency, 100 GB/s links.
+
+    >>> AlphaBeta().alpha
+    1e-05
+    >>> AlphaBeta(alpha=2e-6, beta=5e-12)
+    AlphaBeta(alpha=2e-06, beta=5e-12)
     """
 
     alpha: float = 1e-5
     beta: float = 1e-11
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkTopo:
+    """Per-mesh-axis link topology: ``links[i]`` prices traffic attributed
+    to dp mesh axis ``i``, outermost (slowest) first — the same ordering as
+    ``dp_sizes`` / ``DistConfig.dp_axes``.
+
+    A 2-pod mesh with slow inter-pod NICs and fast intra-pod ICI:
+
+    >>> topo = LinkTopo((AlphaBeta(1e-5, 1e-10), AlphaBeta(1e-6, 1e-11)))
+    >>> topo.n_axes
+    2
+    >>> topo.uniform(AlphaBeta(), 2) == LinkTopo((AlphaBeta(), AlphaBeta()))
+    True
+    """
+
+    links: Tuple[AlphaBeta, ...]
+
+    def __post_init__(self):
+        links = tuple(self.links)
+        if not links:
+            raise ValueError("LinkTopo needs at least one per-axis link")
+        if not all(isinstance(l, AlphaBeta) for l in links):
+            raise TypeError("LinkTopo.links must be AlphaBeta instances")
+        object.__setattr__(self, "links", links)
+
+    @classmethod
+    def uniform(cls, model: AlphaBeta, n_axes: int) -> "LinkTopo":
+        """One identical link class for every axis — reproduces the scalar
+        :class:`AlphaBeta` predictions bit-for-bit (see :func:`predict`)."""
+        return cls((model,) * int(n_axes))
+
+    @property
+    def n_axes(self) -> int:
+        return len(self.links)
+
+    @property
+    def is_uniform(self) -> bool:
+        return all(l == self.links[0] for l in self.links)
+
+
+LinkModel = Union[AlphaBeta, LinkTopo]
+
+
+def as_topo(model: LinkModel, n_axes: int) -> LinkTopo:
+    """Normalize a link model to a :class:`LinkTopo` over ``n_axes`` axes.
+
+    A scalar :class:`AlphaBeta` broadcasts uniformly; a :class:`LinkTopo`
+    must already match the dp mesh rank exactly.
+
+    >>> as_topo(AlphaBeta(), 2).n_axes
+    2
+    >>> as_topo(LinkTopo.uniform(AlphaBeta(), 3), 2)
+    Traceback (most recent call last):
+        ...
+    ValueError: LinkTopo has 3 per-axis links but the dp mesh has 2 axes
+    """
+    if isinstance(model, LinkTopo):
+        if model.n_axes != n_axes:
+            raise ValueError(
+                f"LinkTopo has {model.n_axes} per-axis links but the dp "
+                f"mesh has {n_axes} axes"
+            )
+        return model
+    if isinstance(model, AlphaBeta):
+        return LinkTopo.uniform(model, n_axes)
+    raise TypeError(f"expected AlphaBeta or LinkTopo, got {type(model)!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +148,13 @@ class CostEstimate:
 
 
 def payload_nbytes(payload: Payload) -> int:
-    """Actual buffer bytes of one encoded payload (static shapes)."""
+    """Actual buffer bytes of one encoded payload (static shapes).
+
+    >>> import jax.numpy as jnp
+    >>> payload_nbytes({"vals": jnp.zeros((16,), jnp.float32),
+    ...                 "idx": jnp.zeros((16,), jnp.int32)})
+    128
+    """
     return int(
         sum(
             int(np.prod(x.shape)) * jax.dtypes.canonicalize_dtype(
@@ -64,6 +165,68 @@ def payload_nbytes(payload: Payload) -> int:
     )
 
 
+def pattern_axes(
+    collective: str,
+    length: int,
+    payload_bytes: float,
+    dp_sizes: Sequence[int],
+    word_bytes: int = WORD_BYTES,
+) -> Tuple[Tuple[float, int], ...]:
+    """Per-axis ``(bytes, messages)`` contributions for one worker, one
+    round — aligned with ``dp_sizes`` (outermost first) and summing exactly
+    to the flat pattern.
+
+    Flat rings spanning several axes (``dense_allreduce``,
+    ``sparse_allgather``, and ``hierarchical``'s inter-axis allgather when
+    there are multiple outer axes) are synchronous: each step is gated by
+    the slowest link crossed, i.e. the outermost axis *with more than one
+    worker* in the span under the slowest-first mesh ordering (size-1 axes
+    carry no traffic and must not price anything) — the whole stage is
+    attributed to that axis. ``hierarchical``'s intra-axis dense allreduce
+    runs on the innermost axis alone.
+
+    >>> pattern_axes("hierarchical", 1024, 128.0, (2, 4))
+    ((128.0, 1), (6144.0, 6))
+    >>> pattern_axes("sparse_allgather", 1024, 128.0, (2, 4))
+    ((896.0, 7), (0.0, 0))
+    >>> pattern_axes("sparse_allgather", 1024, 128.0, (1, 4))
+    ((0.0, 0), (384.0, 3))
+    """
+    sizes = [int(s) for s in dp_sizes] or [1]
+    m = len(sizes)
+    n = int(np.prod(sizes))
+    zero = [(0.0, 0)] * m
+
+    def gate(span_sizes):
+        # outermost axis that actually has workers: the slowest link the
+        # flat ring crosses (a size-1 axis contributes no hops)
+        for i, s in enumerate(span_sizes):
+            if s > 1:
+                return i
+        return 0
+
+    if collective == "dense_allreduce":
+        zero[gate(sizes)] = (
+            2.0 * (n - 1) / max(n, 1) * length * word_bytes, 2 * (n - 1)
+        )
+        return tuple(zero)
+    if collective == "sparse_allgather":
+        zero[gate(sizes)] = ((n - 1) * payload_bytes, n - 1)
+        return tuple(zero)
+    if collective == "hierarchical":
+        # last dp axis = intra (fast, dense allreduce); outer axes = inter
+        # (slow, compressed payload allgather) — matches Hierarchical.shard.
+        a = sizes[-1]
+        b = int(np.prod(sizes[:-1])) if m > 1 else 1
+        inter = ((b - 1) * payload_bytes, b - 1)
+        intra = (2.0 * (a - 1) / max(a, 1) * length * word_bytes, 2 * (a - 1))
+        if m == 1:
+            return ((inter[0] + intra[0], inter[1] + intra[1]),)
+        zero[gate(sizes[:-1])], zero[-1] = inter, intra
+        return tuple(zero)
+    raise ValueError(f"unknown collective {collective!r}")
+
+
 def _pattern(
     collective: str,
     length: int,
@@ -71,22 +234,16 @@ def _pattern(
     dp_sizes: Sequence[int],
     word_bytes: int = WORD_BYTES,
 ):
-    """(bytes, messages) for one worker, one round."""
-    sizes = [int(s) for s in dp_sizes] or [1]
-    n = int(np.prod(sizes))
-    if collective == "dense_allreduce":
-        return 2.0 * (n - 1) / max(n, 1) * length * word_bytes, 2 * (n - 1)
-    if collective == "sparse_allgather":
-        return (n - 1) * payload_bytes, n - 1
-    if collective == "hierarchical":
-        # last dp axis = intra (fast, dense allreduce); outer axes = inter
-        # (slow, compressed payload allgather) — matches Hierarchical.shard.
-        a = sizes[-1]
-        b = int(np.prod(sizes[:-1])) if len(sizes) > 1 else 1
-        inter = (b - 1) * payload_bytes
-        intra = 2.0 * (a - 1) / max(a, 1) * length * word_bytes
-        return inter + intra, (b - 1) + 2 * (a - 1)
-    raise ValueError(f"unknown collective {collective!r}")
+    """(bytes, messages) for one worker, one round — the per-axis sums."""
+    per_axis = pattern_axes(
+        collective, length, payload_bytes, dp_sizes, word_bytes
+    )
+    by = 0.0
+    msgs = 0
+    for b, g in per_axis:
+        by += b
+        msgs += g
+    return by, msgs
 
 
 def predicted_bytes(
@@ -98,7 +255,11 @@ def predicted_bytes(
     word_bytes: int = WORD_BYTES,
 ) -> int:
     """Per-worker bytes/round from the codec's exact bit accounting.
-    ``word_bytes`` sizes the dense terms (4 for fp32, 2 for bf16 state)."""
+    ``word_bytes`` sizes the dense terms (4 for fp32, 2 for bf16 state).
+
+    >>> predicted_bytes("coo_fp32", "sparse_allgather", 1024, 16, (8,))
+    896
+    """
     c = get_codec(codec) if isinstance(codec, str) else codec
     pb = math.ceil(int(c.wire_bits(length, k)) / 8)
     by, _ = _pattern(collective, length, pb, dp_sizes, word_bytes)
@@ -112,7 +273,14 @@ def measured_bytes(
     dp_sizes: Sequence[int],
     word_bytes: int = WORD_BYTES,
 ) -> int:
-    """Per-worker bytes/round from the *actual* encoded buffers."""
+    """Per-worker bytes/round from the *actual* encoded buffers.
+
+    >>> import jax.numpy as jnp
+    >>> payload = {"vals": jnp.zeros((16,), jnp.float32),
+    ...            "idx": jnp.zeros((16,), jnp.int32)}
+    >>> measured_bytes("sparse_allgather", 1024, payload, (8,))
+    896
+    """
     by, _ = _pattern(
         collective, length, payload_nbytes(payload), dp_sizes, word_bytes
     )
@@ -125,17 +293,126 @@ def predict(
     length: int,
     k: int,
     dp_sizes: Sequence[int],
-    model: AlphaBeta = AlphaBeta(),
+    model: LinkModel = AlphaBeta(),
     word_bytes: int = WORD_BYTES,
 ) -> CostEstimate:
+    """Alpha–beta cost of one round: bytes, messages and predicted seconds.
+
+    ``model`` is either a scalar :class:`AlphaBeta` (every link identical)
+    or a :class:`LinkTopo` with one link class per dp mesh axis; the
+    per-axis contributions come from :func:`pattern_axes` and
+
+        ``seconds = sum_axis msgs_a * alpha_a + bytes_a * beta_a``.
+
+    A uniform topology is bit-for-bit identical to the scalar model:
+
+    >>> uni = predict("coo_fp32", "sparse_allgather", 1024, 16, (2, 4))
+    >>> topo = LinkTopo.uniform(AlphaBeta(), 2)
+    >>> predict("coo_fp32", "sparse_allgather", 1024, 16, (2, 4), topo) == uni
+    True
+
+    A slow outer axis penalizes the flat collectives but only the (tiny)
+    payload stage of ``hierarchical``:
+
+    >>> slow_outer = LinkTopo((AlphaBeta(1e-5, 1e-9), AlphaBeta(1e-6, 1e-11)))
+    >>> h = predict("coo_fp32", "hierarchical", 10**6, 10**5, (2, 4), slow_outer)
+    >>> g = predict("coo_fp32", "sparse_allgather", 10**6, 10**5, (2, 4), slow_outer)
+    >>> h.seconds < g.seconds
+    True
+    """
     c = get_codec(codec) if isinstance(codec, str) else codec
     pb = math.ceil(int(c.wire_bits(length, k)) / 8)
-    by, msgs = _pattern(collective, length, pb, dp_sizes, word_bytes)
+    per_axis = pattern_axes(collective, length, pb, dp_sizes, word_bytes)
+    by = 0.0
+    msgs = 0
+    for b, g in per_axis:
+        by += b
+        msgs += g
+    topo = as_topo(model, len(per_axis))
+    if topo.is_uniform:
+        # scalar path, kept verbatim so a uniform LinkTopo reproduces the
+        # historical AlphaBeta numbers bit-for-bit (same fp operation order)
+        link = topo.links[0]
+        seconds = msgs * link.alpha + by * link.beta
+    else:
+        seconds = sum(
+            g * l.alpha + b * l.beta
+            for (b, g), l in zip(per_axis, topo.links)
+        )
     return CostEstimate(
         bytes_on_wire=math.ceil(by),
         n_messages=msgs,
-        seconds=msgs * model.alpha + by * model.beta,
+        seconds=seconds,
     )
+
+
+def parse_link_topo(spec: str, dp_axes: Sequence[str]) -> LinkTopo:
+    """Parse a CLI link-topology spec into a :class:`LinkTopo` over
+    ``dp_axes`` (outermost first).
+
+    Grammar: ``;``-separated ``name:alpha,beta`` entries, where ``name`` is
+    a dp mesh axis name or one of the aliases ``intra`` (the innermost dp
+    axis) and ``inter`` (every outer axis). A bare ``alpha,beta`` with no
+    name is uniform across all axes. Every axis must be covered exactly
+    once.
+
+    >>> parse_link_topo("inter:1e-5,1e-10;intra:1e-6,1e-11",
+    ...                 ("pod", "data")).links
+    (AlphaBeta(alpha=1e-05, beta=1e-10), AlphaBeta(alpha=1e-06, beta=1e-11))
+    >>> parse_link_topo("2e-5,3e-11", ("data",))
+    LinkTopo(links=(AlphaBeta(alpha=2e-05, beta=3e-11),))
+    """
+    axes = tuple(dp_axes)
+    if not axes:
+        raise ValueError("parse_link_topo needs at least one dp axis")
+    spec = spec.strip()
+    if not spec:
+        raise ValueError("empty --link-topo spec")
+    if ":" not in spec:
+        model = _parse_alpha_beta(spec)
+        return LinkTopo.uniform(model, len(axes))
+    assigned: dict = {}
+    for entry in spec.split(";"):
+        entry = entry.strip()
+        if not entry:
+            continue
+        name, _, ab = entry.partition(":")
+        name = name.strip()
+        model = _parse_alpha_beta(ab)
+        if name == "intra":
+            targets = (axes[-1],)
+        elif name == "inter":
+            targets = axes[:-1]
+            if not targets:
+                raise ValueError(
+                    "link class 'inter' given but the dp mesh "
+                    f"{list(axes)} has no outer axes"
+                )
+        elif name in axes:
+            targets = (name,)
+        else:
+            raise ValueError(
+                f"unknown link class {name!r}; expected a dp axis name in "
+                f"{list(axes)} or 'intra'/'inter'"
+            )
+        for t in targets:
+            if t in assigned:
+                raise ValueError(f"dp axis {t!r} assigned twice in {spec!r}")
+            assigned[t] = model
+    missing = [a for a in axes if a not in assigned]
+    if missing:
+        raise ValueError(f"dp axes {missing} not covered by {spec!r}")
+    return LinkTopo(tuple(assigned[a] for a in axes))
+
+
+def _parse_alpha_beta(ab: str) -> AlphaBeta:
+    parts = [p.strip() for p in ab.split(",")]
+    if len(parts) != 2:
+        raise ValueError(
+            f"expected 'alpha,beta' (seconds/message, seconds/byte), "
+            f"got {ab!r}"
+        )
+    return AlphaBeta(alpha=float(parts[0]), beta=float(parts[1]))
 
 
 def wire_words_per_worker(
@@ -143,9 +420,23 @@ def wire_words_per_worker(
 ) -> int:
     """Legacy analytic words/round (pre-``repro.comm`` interface).
 
-    Kept for the comm_volume benchmark table; new code should use
-    :func:`predict` which accounts for codec bit width and mesh shape.
+    .. deprecated:: PR 3
+        Use :func:`predicted_bytes` (ring-pattern bytes from the codec's
+        exact ``wire_bits``) or ``get_codec(...).wire_bits`` directly; the
+        migration recipe is in ``docs/comm.md``.
+
+    >>> import warnings
+    >>> with warnings.catch_warnings():
+    ...     warnings.simplefilter("ignore", DeprecationWarning)
+    ...     wire_words_per_worker("sparse_allgather", 1000, 10, 4)
+    80
     """
+    warnings.warn(
+        "wire_words_per_worker is deprecated; use repro.comm.predicted_bytes"
+        " (or Codec.wire_bits) — see docs/comm.md for the migration",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     if mode == "dense_allreduce":
         return length
     if mode == "sparse_allgather":

@@ -66,9 +66,23 @@ class DistConfig:
     # alpha-beta link model driving codec/collective="auto" planning; None
     # uses comm.AlphaBeta() defaults (see comm.calibrate to fit one).
     link_model: Optional[comm.AlphaBeta] = None
+    # per-dp-axis link topology (one AlphaBeta per axis in dp_axes order,
+    # outermost/slowest first) — takes precedence over the scalar
+    # link_model. Fit one with comm.calibrate_topo, or parse a CLI spec
+    # with comm.parse_link_topo (train.py's --link-topo). A heterogeneous
+    # topology is what makes collective="hierarchical" plannable: under a
+    # uniform model it never strictly beats min(dense, allgather).
+    link_topo: Optional[comm.LinkTopo] = None
 
     def resolved_collective(self) -> str:
         return self.collective or self.aggregation
+
+    def resolved_link_model(self) -> comm.LinkModel:
+        """The link model auto-planning scores with: the per-axis topology
+        when given, else the scalar model, else comm.AlphaBeta() defaults."""
+        if self.link_topo is not None:
+            return self.link_topo
+        return self.link_model or comm.AlphaBeta()
 
 
 class LeafPlan(NamedTuple):
@@ -132,7 +146,7 @@ def build_plan(params_shape, specs, mesh, sparsity: float,
     )
     if auto:
         dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
-        model = dist.link_model or comm.AlphaBeta()
+        model = dist.resolved_link_model()
         word_bytes = jnp.dtype(_DT[dist.state_dtype]).itemsize
         codecs = None if dist.codec == "auto" else [dist.codec]
         if dist.sparsifier.kind in ("none", "hard_threshold"):
@@ -307,6 +321,32 @@ def make_sparsify_aggregate(
 # ---------------------------------------------------------------------------
 # communication accounting (repro.comm.cost over the per-leaf plan)
 # ---------------------------------------------------------------------------
+def _leaf_wire_patterns(plan, dist: DistConfig):
+    """Yield ``(leaf, codec, effective_collective, word_bytes, dense_wire)``
+    with the word-sizing rules shared by byte and cost accounting: the
+    sparsified dense psum carries the state-dtype vector (bf16 halves it),
+    the kind="none" pmean upcasts to f32 first (see ``_spa_leaf``), and
+    payload strategies decode to f32 before any intra-axis psum
+    (hierarchical), so their dense terms stay 4-byte words."""
+    dense_word = (
+        4
+        if dist.sparsifier.kind == "none"
+        else jnp.dtype(_DT[dist.state_dtype]).itemsize
+    )
+    for p in jax.tree.leaves(plan, is_leaf=_is_plan):
+        cname, collective = leaf_wire(p, dist)
+        dense_wire = dist.sparsifier.kind == "none" or (
+            collective == "dense_allreduce"
+        )
+        yield (
+            p,
+            comm.get_codec(cname),
+            "dense_allreduce" if dense_wire else collective,
+            dense_word if dense_wire else comm.cost.WORD_BYTES,
+            dense_wire,
+        )
+
+
 def comm_round_bytes(plan, dist: DistConfig, mesh) -> Tuple[int, int]:
     """(predicted, measured) bytes-on-wire per worker per round, summed over
     leaves — each with its *own* (codec, collective) when the plan carries
@@ -314,51 +354,45 @@ def comm_round_bytes(plan, dist: DistConfig, mesh) -> Tuple[int, int]:
     measured from the actual encoded buffer shapes (via ``jax.eval_shape``
     — exact, since payload shapes are static)."""
     dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
-    # the sparsified dense psum carries the state-dtype vector (bf16 halves
-    # it); the kind="none" pmean upcasts to f32 first (see _spa_leaf).
-    dense_word = (
-        4
-        if dist.sparsifier.kind == "none"
-        else jnp.dtype(_DT[dist.state_dtype]).itemsize
-    )
     pred = meas = 0
-    for p in jax.tree.leaves(plan, is_leaf=_is_plan):
-        cname, collective = leaf_wire(p, dist)
-        codec = comm.get_codec(cname)
-        dense_wire = dist.sparsifier.kind == "none" or (
-            collective == "dense_allreduce"
+    for p, codec, coll, wb, dense_wire in _leaf_wire_patterns(plan, dist):
+        pred += comm.predicted_bytes(
+            codec, coll, p.local_len, p.k, dp_sizes, word_bytes=wb
         )
-        if dense_wire:
-            pred += comm.predicted_bytes(
-                codec,
-                "dense_allreduce",
-                p.local_len,
-                p.k,
-                dp_sizes,
-                word_bytes=dense_word,
-            )
-            meas += comm.measured_bytes(
-                "dense_allreduce",
-                p.local_len,
-                {},
-                dp_sizes,
-                word_bytes=dense_word,
-            )
-        else:
-            payload_shape = jax.eval_shape(
-                lambda v, i, L=p.local_len: codec.encode(v, i, L),
-                jax.ShapeDtypeStruct((p.k,), jnp.float32),
-                jax.ShapeDtypeStruct((p.k,), jnp.int32),
-            )
-            # payload strategies decode to f32 before any intra-axis psum
-            # (hierarchical), so their dense term stays 4-byte words.
-            pred += comm.predicted_bytes(
-                codec, collective, p.local_len, p.k, dp_sizes
-            )
-            meas += comm.measured_bytes(
-                collective, p.local_len, payload_shape, dp_sizes
-            )
+        payload_shape = {} if dense_wire else jax.eval_shape(
+            lambda v, i, c=codec, L=p.local_len: c.encode(v, i, L),
+            jax.ShapeDtypeStruct((p.k,), jnp.float32),
+            jax.ShapeDtypeStruct((p.k,), jnp.int32),
+        )
+        meas += comm.measured_bytes(
+            coll, p.local_len, payload_shape, dp_sizes, word_bytes=wb
+        )
     return pred, meas
+
+
+def comm_round_cost(plan, dist: DistConfig, mesh) -> comm.CostEstimate:
+    """Predicted per-worker alpha–beta cost of one full round, summed over
+    leaves under ``dist``'s resolved link model — the per-axis
+    :class:`~repro.comm.cost.LinkTopo` when configured, so a slow outer
+    axis shows up in the round seconds exactly as the planner scored it.
+    Word sizing is shared with :func:`comm_round_bytes` via
+    ``_leaf_wire_patterns``."""
+    dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
+    model = dist.resolved_link_model()
+    total_bytes = total_msgs = 0
+    total_seconds = 0.0
+    for p, codec, coll, wb, _ in _leaf_wire_patterns(plan, dist):
+        est = comm.predict(
+            codec, coll, p.local_len, p.k, dp_sizes, model, word_bytes=wb
+        )
+        total_bytes += est.bytes_on_wire
+        total_msgs += est.n_messages
+        total_seconds += est.seconds
+    return comm.CostEstimate(
+        bytes_on_wire=total_bytes,
+        n_messages=total_msgs,
+        seconds=total_seconds,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,12 @@ import jax.numpy as jnp
 
 
 def exact_topk_mask(score: jax.Array, k: int) -> jax.Array:
-    """Exact top-k mask via ``lax.top_k`` (ties broken by index order)."""
+    """Exact top-k mask via ``lax.top_k`` (ties broken by index order).
+
+    >>> import jax.numpy as jnp
+    >>> exact_topk_mask(jnp.array([0.1, 3.0, 0.2, 2.0]), 2).tolist()
+    [0.0, 1.0, 0.0, 1.0]
+    """
     if score.ndim != 1:
         raise ValueError(f"score must be 1-D, got {score.shape}")
     k = int(k)
@@ -46,6 +51,10 @@ def threshold_topk_mask(
     the smallest count ``>= k``, using ``n_iters`` halvings. Cost is
     ``O(n_iters * J)`` elementwise work with no sort — the pattern the
     Pallas ``threshold_topk`` kernel accelerates with one histogram pass.
+
+    >>> import jax.numpy as jnp
+    >>> threshold_topk_mask(jnp.array([0.1, 3.0, 0.2, 2.0]), 2).tolist()
+    [0.0, 1.0, 0.0, 1.0]
     """
     if score.ndim != 1:
         raise ValueError(f"score must be 1-D, got {score.shape}")
@@ -84,6 +93,12 @@ def fixed_k_payload(
     RegTop-k differ from the score: the *accumulated gradient* is sent, the
     regularized score only ranks). Static ``k`` → static shapes for
     ``all_gather`` over the data-parallel axes.
+
+    >>> import jax.numpy as jnp
+    >>> score = jnp.array([0.1, 3.0, 0.2, 2.0])
+    >>> vals, idx = fixed_k_payload(score, jnp.array([9., 8., 7., 6.]), 2)
+    >>> vals.tolist(), idx.tolist()
+    ([8.0, 6.0], [1, 3])
     """
     if score.ndim != 1:
         raise ValueError(f"score must be 1-D, got {score.shape}")
@@ -100,6 +115,12 @@ def mask_to_payload(
     Ranks masked entries by |value| (unmasked entries rank -inf); if the
     mask has fewer than ``k`` entries the payload is padded with (0, 0)
     pairs, which are no-ops under scatter-add aggregation.
+
+    >>> import jax.numpy as jnp
+    >>> mask = jnp.array([0.0, 1.0, 0.0, 0.0])
+    >>> vals, idx = mask_to_payload(mask, jnp.array([9., -8., 7., 6.]), 2)
+    >>> vals.tolist(), idx.tolist()  # second slot is (0, 0) padding
+    ([-8.0, 0.0], [1, 0])
     """
     ranked = jnp.where(mask > 0, jnp.abs(values), -jnp.inf)
     _, idx = jax.lax.top_k(ranked, int(k))
@@ -115,6 +136,11 @@ SELECTORS = {
 
 
 def get_selector(name: str):
+    """Look up a selector family by name.
+
+    >>> get_selector("exact") is exact_topk_mask
+    True
+    """
     try:
         return SELECTORS[name]
     except KeyError:
@@ -130,6 +156,11 @@ def sparsity_to_k(length: int, sparsity: float) -> int:
     point, so nominally-integer products land a few ulps above the integer
     (``0.07 * 100 == 7.000000000000001``) and a naive ceil inflates k by one
     — inflating the compression ratio the paper defines as S = k/J.
+
+    >>> sparsity_to_k(100, 0.07)
+    7
+    >>> sparsity_to_k(100, 0.071), sparsity_to_k(10, 0.0)
+    (8, 1)
     """
     target = sparsity * length
     eps = 1e-9 * max(1.0, abs(target))

@@ -14,6 +14,7 @@ property tests drive this simulator.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -39,7 +40,15 @@ class SimState(NamedTuple):
 
 @dataclasses.dataclass
 class DistributedSim:
-    """grad_fn(theta, worker_index) -> local gradient [J]."""
+    """grad_fn(theta, worker_index) -> local gradient [J].
+
+    ``dp_shape`` factors the ``n_workers`` ring into a notional multi-axis
+    dp mesh (outermost first, product must equal ``n_workers``) for cost
+    modeling and "auto" planning — the simulated *numerics* are grouping-
+    independent (every collective reference form sums over all workers),
+    but a ``link_topo`` with a slow outer axis then prices (and can plan)
+    ``hierarchical`` exactly like the distributed runtime would.
+    """
 
     grad_fn: Callable[[jax.Array, jax.Array], jax.Array]
     n_workers: int
@@ -50,6 +59,8 @@ class DistributedSim:
     codec: str = "coo_fp32"  # repro.comm wire codec, or "auto"
     collective: Optional[str] = None  # repro.comm strategy, "auto", or None
     link_model: Optional[comm.AlphaBeta] = None  # drives "auto" planning
+    link_topo: Optional[comm.LinkTopo] = None  # per-axis; wins over scalar
+    dp_shape: Optional[Tuple[int, ...]] = None  # notional dp mesh factoring
 
     def __post_init__(self):
         # uniform server weights omega_n = 1/N (paper's arithmetic mean);
@@ -57,6 +68,14 @@ class DistributedSim:
         cfg = dataclasses.replace(self.sparsifier_cfg, omega=1.0 / self.n_workers)
         self.sparsifier: Sparsifier = make_sparsifier(cfg)
         self.weights = jnp.full((self.n_workers,), 1.0 / self.n_workers)
+        dp = tuple(int(s) for s in self.dp_shape) if self.dp_shape else (
+            self.n_workers,
+        )
+        if math.prod(dp) != self.n_workers:
+            raise ValueError(
+                f"dp_shape {dp} does not factor n_workers={self.n_workers}"
+            )
+        self._dp_sizes = dp
         if self.codec == "auto" or self.resolved_collective == "auto":
             # single-leaf mirror of distributed.build_plan's auto planning
             from repro.comm import autotune
@@ -80,8 +99,8 @@ class DistributedSim:
             d = autotune.choose_leaf(
                 self.length,
                 sel_lib.sparsity_to_k(self.length, cfg.sparsity),
-                (self.n_workers,),
-                self.link_model or comm.AlphaBeta(),
+                self._dp_sizes,
+                self.resolved_link_model,
                 codecs=codecs,
                 collectives=colls,
                 allow_lossy=self.codec != "auto",
@@ -104,6 +123,13 @@ class DistributedSim:
     @property
     def resolved_collective(self) -> str:
         return self.collective or self.aggregation
+
+    @property
+    def resolved_link_model(self) -> comm.LinkModel:
+        """Per-axis topology when given, else scalar model, else defaults."""
+        if self.link_topo is not None:
+            return self.link_topo
+        return self.link_model or comm.AlphaBeta()
 
     def init(self, theta0: jax.Array) -> SimState:
         single = self.sparsifier.init(self.length, dtype=theta0.dtype)
@@ -171,17 +197,19 @@ class DistributedSim:
         return new_state, g_agg
 
     def wire_bytes_per_round(
-        self, model: comm.AlphaBeta = comm.AlphaBeta()
+        self, model: Optional[comm.LinkModel] = None
     ) -> comm.CostEstimate:
-        """Per-worker alpha–beta cost of one round at this sim's settings."""
+        """Per-worker alpha–beta cost of one round at this sim's settings,
+        over the sim's (possibly multi-axis) notional dp mesh. ``model``
+        defaults to the sim's own resolved link model/topology."""
         k = sel_lib.sparsity_to_k(self.length, self.sparsifier.cfg.sparsity)
         return comm.predict(
             self._codec,
             self.resolved_collective,
             self.length,
             k,
-            (self.n_workers,),
-            model,
+            self._dp_sizes,
+            self.resolved_link_model if model is None else model,
         )
 
     def run(

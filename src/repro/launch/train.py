@@ -21,6 +21,7 @@ from repro.core.distributed import (
     DistConfig,
     assemble,
     comm_round_bytes,
+    comm_round_cost,
     init_sparsifier_state,
 )
 from repro.core.sparsify import SparsifierConfig
@@ -49,9 +50,17 @@ def main():
     ap.add_argument("--collective", default=None,
                     choices=["dense_allreduce", "sparse_allgather",
                              "hierarchical", "auto"])
+    ap.add_argument("--link-topo", default=None, metavar="SPEC",
+                    help="per-dp-axis link model for auto-planning: "
+                         "';'-separated 'class:alpha,beta' entries where "
+                         "class is a dp axis name or 'intra'/'inter' "
+                         "(e.g. 'intra:1e-6,1e-11;inter:1e-5,1e-10'), or a "
+                         "bare 'alpha,beta' for a uniform model")
     ap.add_argument("--calibrate", action="store_true",
                     help="fit the alpha-beta link model from real "
-                         "collectives before auto-planning")
+                         "collectives before auto-planning (per dp axis "
+                         "on multi-axis meshes; ignored when --link-topo "
+                         "is given)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default="host", choices=["host", "production"])
@@ -77,19 +86,53 @@ def main():
         raise SystemExit(f"--global-batch must be divisible by {W} workers")
 
     link_model = None
-    if args.calibrate:
+    link_topo = None
+    if args.link_topo:
+        from repro import comm
+
+        link_topo = comm.parse_link_topo(args.link_topo, dp_axes)
+        for ax, lk in zip(dp_axes, link_topo.links):
+            print(
+                f"link-topo {ax}: alpha={lk.alpha:.3e} s/msg "
+                f"beta={lk.beta:.3e} s/B",
+                flush=True,
+            )
+        if args.calibrate:
+            print("--link-topo given; skipping --calibrate", flush=True)
+    elif args.calibrate:
         from repro.comm import calibrate as cal
 
-        res = cal.calibrate(mesh=mesh, dp_axes=dp_axes)
-        link_model = res.model
-        print(
-            f"calibrated alpha={link_model.alpha:.3e} s/msg "
-            f"beta={link_model.beta:.3e} s/B "
-            f"(rms {res.residual:.2e}s over {len(res.samples)} probes)"
-            if res.calibrated
-            else "calibration skipped (single device); using defaults",
-            flush=True,
-        )
+        if len(dp_axes) > 1:
+            res = cal.calibrate_topo(mesh=mesh, dp_axes=dp_axes)
+            if res.calibrated:
+                link_topo = res.topo
+                for ax, c in zip(res.axes, res.per_axis):
+                    print(
+                        f"calibrated {ax}: alpha={c.model.alpha:.3e} s/msg "
+                        f"beta={c.model.beta:.3e} s/B "
+                        f"(rms {c.residual:.2e}s over {len(c.samples)} "
+                        "probes)"
+                        if c.calibrated
+                        else f"calibrated {ax}: size-1 axis, defaults kept",
+                        flush=True,
+                    )
+            else:
+                print(
+                    "calibration skipped (no dp axis with >1 worker); "
+                    "using defaults",
+                    flush=True,
+                )
+        else:
+            res = cal.calibrate(mesh=mesh, dp_axes=dp_axes)
+            link_model = res.model
+            print(
+                f"calibrated alpha={link_model.alpha:.3e} s/msg "
+                f"beta={link_model.beta:.3e} s/B "
+                f"(rms {res.residual:.2e}s over {len(res.samples)} probes)"
+                if res.calibrated
+                else "calibration skipped (single device); using defaults",
+                flush=True,
+            )
 
     dist = DistConfig(
         sparsifier=SparsifierConfig(
@@ -102,6 +145,7 @@ def main():
         microbatches=args.microbatches,
         dp_axes=dp_axes,
         link_model=link_model,
+        link_topo=link_topo,
     )
     mod = get_family(cfg)
     asm = assemble(mod, cfg, dist, mesh)
@@ -124,10 +168,12 @@ def main():
     pipe = TokenPipeline(cfg, args.global_batch, args.seq)
     step_fn = jax.jit(asm.train_step)
     pred_b, meas_b = comm_round_bytes(asm.plan, dist, mesh)
+    round_cost = comm_round_cost(asm.plan, dist, mesh)
     print(
         f"comm: codec={dist.codec} collective={dist.resolved_collective()} "
         f"{meas_b / 1e6:.3f} MB/worker/round "
-        f"(predicted {pred_b / 1e6:.3f} MB)",
+        f"(predicted {pred_b / 1e6:.3f} MB, "
+        f"{round_cost.seconds * 1e3:.3f} ms/round under the link model)",
         flush=True,
     )
     if dist.codec == "auto" or dist.resolved_collective() == "auto":

@@ -283,6 +283,214 @@ def test_simulator_auto_hard_threshold_stays_dense():
 
 
 # ---------------------------------------------------------------------------
+# LinkTopo: per-mesh-axis link classes (ISSUE 3 tentpole)
+# ---------------------------------------------------------------------------
+def test_uniform_linktopo_matches_alphabeta_bitforbit():
+    """A LinkTopo with identical per-axis links must reproduce the scalar
+    AlphaBeta predictions exactly — bytes, messages, AND seconds (the
+    uniform path keeps the historical fp operation order)."""
+    scalar = comm.AlphaBeta(alpha=2.3e-5, beta=3.7e-11)
+    for dp in ((8,), (2, 4), (2, 4, 8)):
+        topo = comm.LinkTopo.uniform(scalar, len(dp))
+        for cname in sorted(comm.CODECS):
+            for sname in sorted(comm.COLLECTIVES):
+                for L, k in ((64, 2), (4096, 41), (1_000_000, 10_000)):
+                    u = comm.predict(cname, sname, L, k, dp, scalar)
+                    t = comm.predict(cname, sname, L, k, dp, topo)
+                    assert u.bytes_on_wire == t.bytes_on_wire
+                    assert u.n_messages == t.n_messages
+                    assert u.seconds == t.seconds  # bit-for-bit
+
+
+def test_pattern_axes_sums_to_flat_pattern():
+    from repro.comm.cost import _pattern, pattern_axes
+
+    for coll in sorted(comm.COLLECTIVES):
+        for dp in ((8,), (2, 4), (2, 4, 8)):
+            per_axis = pattern_axes(coll, 4096, 512.0, dp)
+            assert len(per_axis) == len(dp)
+            by, msgs = _pattern(coll, 4096, 512.0, dp)
+            assert sum(b for b, _ in per_axis) == by
+            assert sum(m for _, m in per_axis) == msgs
+
+
+def test_pattern_axes_hierarchical_splits_inter_intra():
+    from repro.comm.cost import pattern_axes
+
+    per_axis = pattern_axes("hierarchical", 1024, 128.0, (2, 4))
+    # outer axis moves only the compressed payload; inner the dense psum
+    assert per_axis[0] == (128.0, 1)
+    assert per_axis[1] == (2.0 * 3 / 4 * 1024 * 4, 6)
+    # flat collectives charge the (slowest) outermost axis of their span
+    flat = pattern_axes("sparse_allgather", 1024, 128.0, (2, 4))
+    assert flat[1] == (0.0, 0) and flat[0][1] == 7
+
+
+def test_pattern_axes_skips_size1_axes():
+    """A size-1 axis carries no traffic: flat stages must charge the
+    outermost axis that actually has workers, so a degenerate (1, N) mesh
+    prices exactly like the single-axis (N,) mesh under any topology."""
+    from repro.comm.cost import pattern_axes
+
+    flat = pattern_axes("sparse_allgather", 1024, 128.0, (1, 4))
+    assert flat[0] == (0.0, 0) and flat[1] == (384.0, 3)
+    hier = pattern_axes("hierarchical", 1024, 128.0, (1, 2, 4))
+    assert hier[0] == (0.0, 0)  # inter payload crosses the size-2 axis
+    assert hier[1] == (128.0, 1)
+    topo = comm.LinkTopo(
+        (comm.AlphaBeta(1e-5, 1e-9), comm.AlphaBeta(1e-6, 1e-11))
+    )
+    for coll in sorted(comm.COLLECTIVES):
+        degenerate = comm.predict("coo_fp32", coll, 10**6, 10**5, (1, 8), topo)
+        flat_mesh = comm.predict(
+            "coo_fp32", coll, 10**6, 10**5, (8,),
+            comm.LinkTopo((topo.links[1],)),
+        )
+        assert degenerate.seconds == flat_mesh.seconds
+        assert degenerate.bytes_on_wire == flat_mesh.bytes_on_wire
+
+
+def test_linktopo_rank_must_match_dp_axes():
+    topo3 = comm.LinkTopo.uniform(comm.AlphaBeta(), 3)
+    with pytest.raises(ValueError, match="3 per-axis links"):
+        comm.predict("coo_fp32", "sparse_allgather", 64, 2, (2, 4), topo3)
+    with pytest.raises(ValueError, match="per-axis links"):
+        choose_leaf(64, 2, (8,), topo3)
+    with pytest.raises(ValueError, match="at least one"):
+        comm.LinkTopo(())
+
+
+SLOW_OUTER = comm.LinkTopo(
+    (comm.AlphaBeta(alpha=1e-5, beta=1e-10),
+     comm.AlphaBeta(alpha=1e-6, beta=1e-11))  # outer beta = 10x intra
+)
+
+
+def test_slow_outer_topo_flips_choice_to_hierarchical():
+    """The acceptance setting: a (2, 4) dp mesh whose outer-axis beta is
+    >= 10x the intra-axis beta must plan `hierarchical` for large
+    moderately-sparse leaves — which a uniform bandwidth-only model
+    provably never strictly prefers (docs/comm.md envelope proof)."""
+    L, k = 1_000_000, 100_000
+    het = choose_leaf(L, k, (2, 4), SLOW_OUTER)
+    assert het.collective == "hierarchical"
+    # same leaf, uniform bandwidth-only link: sits on the envelope
+    uni = choose_leaf(
+        L, k, (2, 4), comm.AlphaBeta(alpha=0.0, beta=1e-11)
+    )
+    assert uni.collective != "hierarchical"
+    # and the planner's pick is strictly cheaper than both flat patterns
+    for coll in ("dense_allreduce", "sparse_allgather"):
+        fixed = choose_leaf(L, k, (2, 4), SLOW_OUTER, collectives=[coll])
+        assert het.cost.seconds < fixed.cost.seconds
+
+
+def test_plan_tree_slow_outer_selects_hierarchical_for_large_leaves():
+    tree = {
+        "big": _leaf(1_000_000, 0.1),
+        "bias": _leaf(64, 0.05),
+    }
+    cp = plan_tree(tree, (2, 4), SLOW_OUTER)
+    assert cp.decisions["big"].collective == "hierarchical"
+    assert cp.model == SLOW_OUTER  # CommPlan carries the topology
+    uni = plan_tree(tree, (2, 4))
+    assert isinstance(uni.model, comm.LinkTopo) and uni.model.is_uniform
+
+
+def test_parse_link_topo_specs():
+    topo = comm.parse_link_topo(
+        "inter:1e-5,1e-10;intra:1e-6,1e-11", ("pod", "data")
+    )
+    assert topo.links == (
+        comm.AlphaBeta(1e-5, 1e-10), comm.AlphaBeta(1e-6, 1e-11)
+    )
+    # axis names directly, any order in the spec; result is dp-axis order
+    topo2 = comm.parse_link_topo(
+        "data:1e-6,1e-11;pod:1e-5,1e-10", ("pod", "data")
+    )
+    assert topo2 == topo
+    # bare alpha,beta is uniform
+    uni = comm.parse_link_topo("2e-5,3e-11", ("pod", "data"))
+    assert uni == comm.LinkTopo.uniform(comm.AlphaBeta(2e-5, 3e-11), 2)
+    with pytest.raises(ValueError, match="unknown link class"):
+        comm.parse_link_topo("bogus:1,1", ("data",))
+    with pytest.raises(ValueError, match="no outer axes"):
+        comm.parse_link_topo("inter:1,1;intra:1,1", ("data",))
+    with pytest.raises(ValueError, match="not covered"):
+        comm.parse_link_topo("intra:1,1", ("pod", "data"))
+    with pytest.raises(ValueError, match="assigned twice"):
+        comm.parse_link_topo("intra:1,1;data:2,2", ("pod", "data"))
+
+
+def test_distconfig_link_topo_threads_into_build_plan():
+    class _Mesh2:
+        shape = {"pod": 2, "data": 4}
+
+    shapes = _shapes({"big": 1_000_000, "bias": 64})
+    specs = {"big": P(None), "bias": P(None)}
+    dist = DistConfig(
+        sparsifier=SparsifierConfig(kind="regtopk", sparsity=0.1),
+        codec="auto", collective="auto",
+        dp_axes=("pod", "data"), link_topo=SLOW_OUTER,
+    )
+    plan = build_plan(shapes, specs, _Mesh2(), 0.1, dist)
+    assert plan["big"].collective == "hierarchical"
+    assert dist.resolved_link_model() is SLOW_OUTER
+    # without the topo the same mesh plans a flat collective for "big"
+    uni = dataclasses.replace(dist, link_topo=None)
+    plan_u = build_plan(shapes, specs, _Mesh2(), 0.1, uni)
+    assert plan_u["big"].collective != "hierarchical"
+    # comm_round_cost prices the round under the same topology
+    from repro.core.distributed import comm_round_cost
+
+    est = comm_round_cost(plan, dist, _Mesh2())
+    est_u = comm_round_cost(plan_u, uni, _Mesh2())
+    assert est.seconds < est_u.seconds
+
+
+def test_simulator_dp_shape_and_link_topo():
+    grad_fn = _toy()
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.5, mu=1.0)
+    sim = DistributedSim(
+        grad_fn, 2, 2, cfg, learning_rate=0.9,
+        codec="auto", collective="auto",
+        dp_shape=(2, 1), link_topo=SLOW_OUTER,
+    )
+    assert sim.resolved_link_model is SLOW_OUTER
+    est = sim.wire_bytes_per_round()
+    assert est.bytes_on_wire >= 0 and est.seconds > 0
+    # numerics stay dense-equivalent regardless of the notional grouping
+    ref = DistributedSim(grad_fn, 2, 2, cfg, learning_rate=0.9)
+    fin, _ = sim.run(jnp.array([0.0, 1.0]), 30)
+    fin_ref, _ = ref.run(jnp.array([0.0, 1.0]), 30)
+    np.testing.assert_allclose(
+        np.asarray(fin.theta), np.asarray(fin_ref.theta), rtol=1e-5
+    )
+    with pytest.raises(ValueError, match="does not factor"):
+        DistributedSim(grad_fn, 2, 2, cfg, dp_shape=(3,))
+
+
+def test_calibrate_topo_single_device_falls_back():
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("pod", "data"))
+    res = comm.calibrate_topo(mesh=mesh, dp_axes=("pod", "data"))
+    assert not res.calibrated
+    assert res.topo == comm.LinkTopo.uniform(comm.AlphaBeta(), 2)
+    assert res.axes == ("pod", "data")
+    assert all(not c.calibrated for c in res.per_axis)
+
+
+def test_calibrate_rejects_dp_axes_without_mesh():
+    """dp_axes name axes of a specific mesh; without it the entry points
+    must refuse rather than silently probe a different topology."""
+    with pytest.raises(ValueError, match="ambiguous"):
+        comm.calibrate_topo(dp_axes=("pod", "data"))
+    with pytest.raises(ValueError, match="ambiguous"):
+        comm.run_calibration(dp_axes=("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
 # calibration fit
 # ---------------------------------------------------------------------------
 def test_fit_alpha_beta_recovers_synthetic_model():

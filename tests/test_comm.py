@@ -329,9 +329,13 @@ def test_sparse_beats_dense_at_low_sparsity():
 def test_legacy_wire_words_shim():
     from repro.core import wire_words_per_worker
 
-    assert wire_words_per_worker("dense_allreduce", 1000, 10, 4) == 1000
-    assert wire_words_per_worker("sparse_allgather", 1000, 10, 4) == 80
-    with pytest.raises(ValueError):
+    # legacy interface still answers, but flags itself (migration:
+    # docs/comm.md); new code uses predicted_bytes / Codec.wire_bits.
+    with pytest.warns(DeprecationWarning, match="predicted_bytes"):
+        assert wire_words_per_worker("dense_allreduce", 1000, 10, 4) == 1000
+    with pytest.warns(DeprecationWarning):
+        assert wire_words_per_worker("sparse_allgather", 1000, 10, 4) == 80
+    with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
         wire_words_per_worker("bogus", 1, 1, 1)
 
 

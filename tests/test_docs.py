@@ -1,0 +1,77 @@
+"""Docs subsystem checks (ISSUE 3 satellites).
+
+The `docs/` pages must exist, their links/anchors/file references must
+resolve (tools/check_docs.py — the same checker the CI `docs` job runs),
+and every public `repro.comm` module-level function must carry a doctest
+example (verified by `pytest --doctest-modules src/repro/comm` in CI;
+here we enforce presence so drift fails tier-1 too).
+"""
+import importlib
+import inspect
+import os
+import sys
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_docs  # noqa: E402  (tools/check_docs.py)
+
+
+def test_docs_pages_exist():
+    for page in ("docs/paper_map.md", "docs/comm.md"):
+        assert os.path.exists(os.path.join(REPO, page)), f"{page} missing"
+
+
+@pytest.mark.parametrize(
+    "page", ["docs/paper_map.md", "docs/comm.md", "README.md"]
+)
+def test_docs_links_and_paths_resolve(page):
+    errors = check_docs.check_file(os.path.join(REPO, page))
+    assert not errors, "\n".join(errors)
+
+
+def test_check_docs_catches_breakage(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text(
+        "[x](nonexistent.md) and [y](#no-such-heading)\n"
+        "`src/repro/comm/nonexistent.py` and "
+        "`src/repro/comm/cost.py::not_a_function`\n"
+    )
+    errors = check_docs.check_file(str(bad))
+    assert len(errors) == 4
+
+
+def test_github_slugs():
+    assert check_docs.github_slug("The `repro.comm` subsystem") == (
+        "the-reprocomm-subsystem"
+    )
+    assert check_docs.github_slug("Per-axis decomposition: `LinkTopo`") == (
+        "per-axis-decomposition-linktopo"
+    )
+
+
+COMM_MODULES = [
+    "repro.comm.codec",
+    "repro.comm.collectives",
+    "repro.comm.cost",
+    "repro.comm.autotune",
+    "repro.comm.calibrate",
+]
+
+
+@pytest.mark.parametrize("modname", COMM_MODULES)
+def test_public_comm_functions_have_doctests(modname):
+    mod = importlib.import_module(modname)
+    missing = []
+    for name, fn in vars(mod).items():
+        if name.startswith("_") or not inspect.isfunction(fn):
+            continue
+        if fn.__module__ != modname:
+            continue  # re-export, owned elsewhere
+        if ">>>" not in (inspect.getdoc(fn) or ""):
+            missing.append(name)
+    assert not missing, (
+        f"{modname}: public functions without doctest examples: {missing}"
+    )

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Docs link checker (CI `docs` job; no third-party deps).
+
+Validates, over the given markdown files (default: docs/*.md README.md):
+
+* every markdown link ``[text](target)``: external http(s)/mailto links
+  are skipped; ``#anchor`` targets must match a heading slug (GitHub
+  slugging) in the target file; relative paths resolve from the linking
+  file's directory;
+* every backtick code span that looks like a repo file path
+  (contains ``/`` and a known source suffix) must exist relative to the
+  repo root; a ``path::symbol`` span additionally requires ``def symbol``
+  / ``class symbol`` to be present in that file.
+
+Exit status 0 when everything resolves, 1 otherwise (one line per
+problem). Used by tests/test_docs.py and .github/workflows/ci.yml.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+PATH_SUFFIXES = (".py", ".md", ".yml", ".yaml", ".txt", ".toml", ".cfg")
+
+
+def strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks — their contents are illustrative."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        out.append("" if in_fence else line)
+    return "\n".join(out)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: inline code/markup dropped, lowercase,
+    punctuation removed, spaces to hyphens."""
+    h = re.sub(r"[`*_]", "", heading).strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(md_path: str) -> set:
+    slugs = set()
+    with open(md_path, encoding="utf-8") as f:
+        text = strip_code_blocks(f.read())
+    counts: dict = {}
+    for line in text.splitlines():
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+        slugs.add(slug)
+    return slugs
+
+
+def check_link(md_path: str, target: str):
+    """Yield error strings for one markdown link target."""
+    if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:
+        return
+    path_part, _, anchor = target.partition("#")
+    if path_part:
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(md_path), path_part)
+        )
+        if not os.path.exists(resolved):
+            yield f"{md_path}: broken link path {target!r}"
+            return
+    else:
+        resolved = md_path
+    if anchor:
+        if not resolved.endswith(".md"):
+            return
+        if anchor not in heading_slugs(resolved):
+            yield f"{md_path}: broken anchor {target!r} (no such heading)"
+
+
+def check_code_span(md_path: str, span: str):
+    """Yield error strings for one backtick span that names a repo path."""
+    path, _, symbol = span.partition("::")
+    if "/" not in path or not path.endswith(PATH_SUFFIXES):
+        return
+    if not re.match(r"^[\w\-./]+$", path) or path.startswith(("/", "~")):
+        return  # not a repo-relative path (absolute, URL-ish, or prose)
+    resolved = os.path.join(REPO_ROOT, path)
+    if not os.path.exists(resolved):
+        yield f"{md_path}: referenced file {path!r} does not exist"
+        return
+    if symbol:
+        with open(resolved, encoding="utf-8") as f:
+            src = f.read()
+        if not re.search(
+            rf"^\s*(def|class)\s+{re.escape(symbol)}\b", src, re.M
+        ):
+            yield f"{md_path}: {path!r} has no def/class {symbol!r}"
+
+
+def check_file(md_path: str):
+    with open(md_path, encoding="utf-8") as f:
+        text = strip_code_blocks(f.read())
+    errors = []
+    for m in LINK_RE.finditer(text):
+        errors.extend(check_link(md_path, m.group(1)))
+    for m in CODE_SPAN_RE.finditer(text):
+        errors.extend(check_code_span(md_path, m.group(1)))
+    return errors
+
+
+def main(argv):
+    files = argv or sorted(
+        glob.glob(os.path.join(REPO_ROOT, "docs", "*.md"))
+    ) + [os.path.join(REPO_ROOT, "README.md")]
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    checked = ", ".join(os.path.relpath(f, REPO_ROOT) for f in files)
+    print(f"check_docs: {len(files)} files ({checked}): "
+          f"{'OK' if not errors else f'{len(errors)} problem(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
