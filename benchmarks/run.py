@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   comm_volume   — Sec. 2.2 compression table
   comm_bench    — repro.comm codec x strategy x sparsity sweep (ISSUE 1)
   autotune_bench— per-leaf (codec x collective) planner + calibration (ISSUE 2)
+  straggler_bench — convergence gap vs dropout x sparsity, partial-round
+                  cost asserts (ISSUE 4)
   kernel_bench  — Pallas kernel microbenches
   roofline      — §Roofline terms from the dry-run artifacts
   perf_summary  — §Perf hillclimb before/after + multi-pod scaling
@@ -34,6 +36,7 @@ MODULES = [
     "comm_volume",
     "comm_bench",
     "autotune_bench",
+    "straggler_bench",
     "kernel_bench",
     "serve_bench",
     "roofline",

@@ -15,6 +15,10 @@ Five layers:
 * :mod:`repro.comm.calibrate`   — micro-harness timing real collectives to
   fit :class:`AlphaBeta` (uniform) or a per-axis :class:`LinkTopo`
   (``calibrate_topo``).
+* :mod:`repro.comm.participation` — partial-participation / staleness
+  round schedules (:class:`Participation`) composing with every collective
+  via renormalized per-round weights, priced by the cost model's
+  ``participants=`` argument.
 
 See ``docs/comm.md`` for wire-format bit layouts, the collective ring
 patterns, and the cost-model math (including why a uniform link model can
@@ -52,6 +56,13 @@ from repro.comm.collectives import (
     SparseAllgather,
     get_collective,
 )
+from repro.comm.participation import (
+    PARTICIPATION_KINDS,
+    Participation,
+    parse_participation,
+    renormalize_weights,
+    worker_index,
+)
 from repro.comm.cost import (
     AlphaBeta,
     CostEstimate,
@@ -85,6 +96,8 @@ __all__ = [
     "LeafDecision",
     "LinkModel",
     "LinkTopo",
+    "PARTICIPATION_KINDS",
+    "Participation",
     "Sample",
     "SparseAllgather",
     "TopoCalibration",
@@ -99,11 +112,14 @@ __all__ = [
     "get_collective",
     "measured_bytes",
     "parse_link_topo",
+    "parse_participation",
     "pattern_axes",
     "payload_nbytes",
     "plan_tree",
     "predict",
     "predicted_bytes",
+    "renormalize_weights",
     "run_calibration",
     "wire_words_per_worker",
+    "worker_index",
 ]

@@ -146,6 +146,7 @@ def choose_leaf(
     collectives: Optional[Sequence[str]] = None,
     allow_lossy: bool = False,
     word_bytes: int = WORD_BYTES,
+    participants: Optional[float] = None,
 ) -> LeafDecision:
     """Score every admissible pair with ``cost.predict``; return the argmin.
 
@@ -153,6 +154,11 @@ def choose_leaf(
 
     ``model`` is a scalar :class:`AlphaBeta` or a per-axis
     :class:`LinkTopo` (length must equal ``len(dp_sizes)``).
+
+    ``participants`` scores every candidate at a *partial* round (the
+    expected on-time worker count of a straggler schedule — see
+    ``Participation.expected_participants``), so auto-planning can trade
+    dropout rate against wire cost.
 
     ``word_bytes`` sizes the ``dense_allreduce`` wire (the sparsified dense
     psum carries the state dtype — 2 for bf16). Payload strategies always
@@ -175,7 +181,7 @@ def choose_leaf(
     for cname, sname in candidate_pairs(codecs, collectives, allow_lossy):
         wb = word_bytes if sname == "dense_allreduce" else WORD_BYTES
         est = cost_lib.predict(
-            cname, sname, length, k, dp_sizes, model, wb
+            cname, sname, length, k, dp_sizes, model, wb, participants
         )
         key = (est.seconds, est.bytes_on_wire, cname, sname)
         if best is None or key < best[0]:
@@ -192,6 +198,7 @@ def plan_tree(
     collectives: Optional[Sequence[str]] = None,
     allow_lossy: bool = False,
     word_bytes: int = WORD_BYTES,
+    participants: Optional[float] = None,
 ) -> CommPlan:
     """Plan every leaf of a ``LeafPlan`` pytree (``repro.core.distributed``).
 
@@ -223,6 +230,7 @@ def plan_tree(
             collectives=collectives,
             allow_lossy=allow_lossy,
             word_bytes=word_bytes,
+            participants=participants,
         )
 
     decisions = jax.tree.map(

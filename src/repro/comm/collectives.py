@@ -26,15 +26,31 @@ Strategies:
   + scatter-add locally, then a dense psum over the innermost *intra* axis
   (fast links move dense partials). Degenerates to a psum of the decoded
   payload on a single-axis mesh.
+
+Partial participation composes with every strategy through the optional
+``participation`` argument rather than being baked into any of them
+(:mod:`repro.comm.participation`):
+
+* ``reference(..., participation=mask)`` — ``mask`` is the round's
+  ``{0,1}`` participation vector ``[N]``; the weights are masked and
+  renormalized to sum to one before the reduction.
+* ``shard(..., participation=m)`` — ``m`` is *this worker's* scalar mask
+  entry; its contribution is scaled by ``m`` (the caller supplies the
+  already-renormalized participant weight, computable locally because
+  schedules are deterministic common knowledge).
+
+``participation=None`` (the default) is the historical all-workers path,
+bit-for-bit.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.comm.codec import Codec, Payload
+from repro.comm.participation import renormalize_weights
 
 
 def _gather_payload(payload: Payload, axis_names: Sequence[str]) -> Payload:
@@ -51,6 +67,29 @@ def _gather_payload(payload: Payload, axis_names: Sequence[str]) -> Payload:
     return jax.tree.map(gather_leaf, payload)
 
 
+def _reference_weights(weights, participation):
+    """Renormalized per-worker weights for one reference-form round:
+    ``participation`` (a ``{0,1}`` mask ``[N]``, or None for full) masks
+    the base weights and renormalizes them to sum to one."""
+    if participation is None:
+        return weights
+    w = jnp.asarray(weights)
+    mask = jnp.asarray(participation)
+    if jnp.ndim(w) == 0:
+        w = jnp.full(mask.shape, w)
+    return renormalize_weights(w, mask)
+
+
+def _shard_weight(weight, participation):
+    """This worker's effective weight inside ``shard_map``: its (already
+    renormalized) participant weight scaled by its own mask entry."""
+    if participation is None:
+        return weight
+    return weight * participation
+
+
+
+
 class Collective:
     name: str = "base"
 
@@ -60,6 +99,7 @@ class Collective:
         payloads: Payload,
         weights: jax.Array,
         length: int,
+        participation: Optional[jax.Array] = None,
     ) -> jax.Array:
         raise NotImplementedError
 
@@ -70,6 +110,7 @@ class Collective:
         length: int,
         axis_names: Sequence[str],
         weight: jax.Array | float,
+        participation: Optional[jax.Array] = None,
     ) -> jax.Array:
         raise NotImplementedError
 
@@ -93,12 +134,26 @@ def _decode_scatter_stack(
 class SparseAllgather(Collective):
     name = "sparse_allgather"
 
-    def reference(self, codec, payloads, weights, length):
-        return _decode_scatter_stack(codec, payloads, weights, length)
+    def reference(self, codec, payloads, weights, length, participation=None):
+        w = _reference_weights(weights, participation)
+        return _decode_scatter_stack(codec, payloads, w, length)
 
-    def shard(self, codec, payload, length, axis_names, weight):
-        gathered = _gather_payload(payload, axis_names)
-        return _decode_scatter_stack(codec, gathered, weight, length)
+    def shard(
+        self, codec, payload, length, axis_names, weight, participation=None
+    ):
+        if participation is None:
+            gathered = _gather_payload(payload, axis_names)
+            return _decode_scatter_stack(codec, gathered, weight, length)
+        # partial round: gather each worker's own effective weight
+        # (weight * its mask entry) alongside its payload, so the weights
+        # arrive in exactly the gather's stacking order — a dropped
+        # worker's payload rides the wire (SPMD) but lands with weight 0.
+        # No payload transform, so this is exact for every codec.
+        w_local = (
+            jnp.asarray(weight, jnp.float32) * participation
+        ).reshape((1,))
+        gathered, w = _gather_payload((payload, w_local), axis_names)
+        return _decode_scatter_stack(codec, gathered, w.reshape(-1), length)
 
 
 class Hierarchical(Collective):
@@ -113,21 +168,25 @@ class Hierarchical(Collective):
 
     name = "hierarchical"
 
-    def reference(self, codec, payloads, weights, length):
+    def reference(self, codec, payloads, weights, length, participation=None):
         # single-process: the grouping is notional — numerics are identical
         # to sparse_allgather (sum over all workers either way).
-        return _decode_scatter_stack(codec, payloads, weights, length)
+        w = _reference_weights(weights, participation)
+        return _decode_scatter_stack(codec, payloads, w, length)
 
-    def shard(self, codec, payload, length, axis_names, weight):
+    def shard(
+        self, codec, payload, length, axis_names, weight, participation=None
+    ):
         inter, intra = tuple(axis_names[:-1]), axis_names[-1]
         if inter:
             partial = SparseAllgather().shard(
-                codec, payload, length, inter, weight
+                codec, payload, length, inter, weight, participation
             )
         else:
             vals, idx = codec.decode(payload, length)
+            w = _shard_weight(weight, participation)
             partial = (
-                jnp.zeros((length,), vals.dtype).at[idx].add(vals * weight)
+                jnp.zeros((length,), vals.dtype).at[idx].add(vals * w)
             )
         return jax.lax.psum(partial, intra)
 
@@ -142,18 +201,22 @@ class DenseAllreduce(Collective):
 
     name = "dense_allreduce"
 
-    def reference(self, codec, payloads, weights, length):
+    def reference(self, codec, payloads, weights, length, participation=None):
         dense = jax.vmap(lambda p: codec.decoded_dense(p, length))(payloads)
         w = (
             jnp.full((dense.shape[0],), weights)
             if jnp.ndim(weights) == 0
             else weights
         )
+        w = _reference_weights(w, participation)
         return jnp.einsum("n,nl->l", w, dense)
 
-    def shard(self, codec, payload, length, axis_names, weight):
+    def shard(
+        self, codec, payload, length, axis_names, weight, participation=None
+    ):
         dense = codec.decoded_dense(payload, length)
-        return jax.lax.psum(dense * weight, tuple(axis_names))
+        w = _shard_weight(weight, participation)
+        return jax.lax.psum(dense * w, tuple(axis_names))
 
 
 COLLECTIVES = {

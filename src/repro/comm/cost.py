@@ -46,7 +46,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import warnings
-from typing import Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -165,12 +165,31 @@ def payload_nbytes(payload: Payload) -> int:
     )
 
 
+def _ring_fraction(
+    dp_sizes: Sequence[int], participants: Optional[float]
+) -> float:
+    """Participating fraction ``f`` of the *hop count* of each ring stage:
+    a group of size ``g`` shrinks to ``1 + (g - 1) * f`` effective members
+    (exact at full participation, never below one, strictly smaller on any
+    stage with >1 worker when ``f < 1``)."""
+    if participants is None:
+        return 1.0
+    n = int(np.prod([int(s) for s in dp_sizes])) or 1
+    if not 1.0 <= float(participants) <= n:
+        raise ValueError(
+            f"participants={participants} outside [1, {n}] for dp mesh "
+            f"{tuple(dp_sizes)}"
+        )
+    return (float(participants) - 1.0) / max(n - 1, 1) if n > 1 else 1.0
+
+
 def pattern_axes(
     collective: str,
     length: int,
     payload_bytes: float,
     dp_sizes: Sequence[int],
     word_bytes: int = WORD_BYTES,
+    participants: Optional[float] = None,
 ) -> Tuple[Tuple[float, int], ...]:
     """Per-axis ``(bytes, messages)`` contributions for one worker, one
     round — aligned with ``dp_sizes`` (outermost first) and summing exactly
@@ -185,16 +204,33 @@ def pattern_axes(
     attributed to that axis. ``hierarchical``'s intra-axis dense allreduce
     runs on the innermost axis alone.
 
+    ``participants`` prices a *partial* round (straggler-dropping
+    schedules, see :mod:`repro.comm.participation`): it is the expected
+    number of on-time workers over the whole flat group, and a ring
+    stage's group size ``g`` shrinks proportionally to
+    ``1 + (g - 1) * (participants - 1)/(N - 1)`` — fewer hops, so fewer
+    messages and bytes on the charged axes, strictly so whenever
+    ``participants < N`` on a stage with more than one worker. The one
+    exception is ``hierarchical``'s intra-axis allreduce when the mesh
+    has ``B > 1`` inter-axis groups: it runs as ``B`` parallel rings and
+    the synchronous round is gated by the fullest of them, so that stage
+    stays full-size (with ``B == 1`` it is the same single ring
+    ``dense_allreduce`` prices, and shrinks identically). ``None`` (or
+    ``participants == N``) reproduces the full-round pattern exactly.
+
     >>> pattern_axes("hierarchical", 1024, 128.0, (2, 4))
     ((128.0, 1), (6144.0, 6))
     >>> pattern_axes("sparse_allgather", 1024, 128.0, (2, 4))
     ((896.0, 7), (0.0, 0))
     >>> pattern_axes("sparse_allgather", 1024, 128.0, (1, 4))
     ((0.0, 0), (384.0, 3))
+    >>> pattern_axes("sparse_allgather", 1024, 128.0, (8,), participants=4.5)
+    ((448.0, 4),)
     """
     sizes = [int(s) for s in dp_sizes] or [1]
     m = len(sizes)
     n = int(np.prod(sizes))
+    f = _ring_fraction(sizes, participants)
     zero = [(0.0, 0)] * m
 
     def gate(span_sizes):
@@ -205,21 +241,40 @@ def pattern_axes(
                 return i
         return 0
 
-    if collective == "dense_allreduce":
-        zero[gate(sizes)] = (
-            2.0 * (n - 1) / max(n, 1) * length * word_bytes, 2 * (n - 1)
+    def allreduce_stage(g: int, frac: float = f):
+        # effective ring-group size under partial participation
+        p = 1.0 + (g - 1) * frac
+        return (
+            2.0 * (p - 1) / max(p, 1.0) * length * word_bytes,
+            math.ceil(2 * (p - 1) - 1e-9) if p > 1 else 0,
         )
+
+    def gather_stage(g: int):
+        p = 1.0 + (g - 1) * f
+        return (
+            (p - 1) * payload_bytes,
+            math.ceil(p - 1 - 1e-9) if p > 1 else 0,
+        )
+
+    if collective == "dense_allreduce":
+        zero[gate(sizes)] = allreduce_stage(n)
         return tuple(zero)
     if collective == "sparse_allgather":
-        zero[gate(sizes)] = ((n - 1) * payload_bytes, n - 1)
+        zero[gate(sizes)] = gather_stage(n)
         return tuple(zero)
     if collective == "hierarchical":
         # last dp axis = intra (fast, dense allreduce); outer axes = inter
         # (slow, compressed payload allgather) — matches Hierarchical.shard.
+        # Participation shrinks the inter gather; the intra stage is B
+        # parallel rings and the synchronous round is gated by the
+        # fullest of them, so with B > 1 it is priced full-size (a
+        # straggler thins one ring, not the critical-path one). With
+        # B == 1 there is a single ring — the same ring dense_allreduce
+        # prices — and it shrinks identically.
         a = sizes[-1]
         b = int(np.prod(sizes[:-1])) if m > 1 else 1
-        inter = ((b - 1) * payload_bytes, b - 1)
-        intra = (2.0 * (a - 1) / max(a, 1) * length * word_bytes, 2 * (a - 1))
+        inter = gather_stage(b)
+        intra = allreduce_stage(a, frac=1.0 if b > 1 else f)
         if m == 1:
             return ((inter[0] + intra[0], inter[1] + intra[1]),)
         zero[gate(sizes[:-1])], zero[-1] = inter, intra
@@ -233,10 +288,11 @@ def _pattern(
     payload_bytes: float,
     dp_sizes: Sequence[int],
     word_bytes: int = WORD_BYTES,
+    participants: Optional[float] = None,
 ):
     """(bytes, messages) for one worker, one round — the per-axis sums."""
     per_axis = pattern_axes(
-        collective, length, payload_bytes, dp_sizes, word_bytes
+        collective, length, payload_bytes, dp_sizes, word_bytes, participants
     )
     by = 0.0
     msgs = 0
@@ -253,16 +309,24 @@ def predicted_bytes(
     k: int,
     dp_sizes: Sequence[int],
     word_bytes: int = WORD_BYTES,
+    participants: Optional[float] = None,
 ) -> int:
     """Per-worker bytes/round from the codec's exact bit accounting.
-    ``word_bytes`` sizes the dense terms (4 for fp32, 2 for bf16 state).
+    ``word_bytes`` sizes the dense terms (4 for fp32, 2 for bf16 state);
+    ``participants`` prices a partial-participation round (see
+    :func:`pattern_axes`).
 
     >>> predicted_bytes("coo_fp32", "sparse_allgather", 1024, 16, (8,))
     896
+    >>> predicted_bytes("coo_fp32", "sparse_allgather", 1024, 16, (8,),
+    ...                 participants=4.5)
+    448
     """
     c = get_codec(codec) if isinstance(codec, str) else codec
     pb = math.ceil(int(c.wire_bits(length, k)) / 8)
-    by, _ = _pattern(collective, length, pb, dp_sizes, word_bytes)
+    by, _ = _pattern(
+        collective, length, pb, dp_sizes, word_bytes, participants
+    )
     return math.ceil(by)
 
 
@@ -274,6 +338,11 @@ def measured_bytes(
     word_bytes: int = WORD_BYTES,
 ) -> int:
     """Per-worker bytes/round from the *actual* encoded buffers.
+
+    Always a full-round figure: the SPMD collectives move every worker's
+    (possibly zero-masked) full-size buffer whatever the participation
+    schedule, so partial-round pricing lives on the *predicted* side only
+    (:func:`predicted_bytes` / :func:`predict` ``participants=``).
 
     >>> import jax.numpy as jnp
     >>> payload = {"vals": jnp.zeros((16,), jnp.float32),
@@ -295,6 +364,7 @@ def predict(
     dp_sizes: Sequence[int],
     model: LinkModel = AlphaBeta(),
     word_bytes: int = WORD_BYTES,
+    participants: Optional[float] = None,
 ) -> CostEstimate:
     """Alpha–beta cost of one round: bytes, messages and predicted seconds.
 
@@ -303,6 +373,10 @@ def predict(
     per-axis contributions come from :func:`pattern_axes` and
 
         ``seconds = sum_axis msgs_a * alpha_a + bytes_a * beta_a``.
+
+    ``participants`` prices a partial-participation round — fewer ring
+    hops, so strictly fewer bytes and messages on any charged axis with
+    more than one worker (see :func:`pattern_axes`).
 
     A uniform topology is bit-for-bit identical to the scalar model:
 
@@ -322,7 +396,9 @@ def predict(
     """
     c = get_codec(codec) if isinstance(codec, str) else codec
     pb = math.ceil(int(c.wire_bits(length, k)) / 8)
-    per_axis = pattern_axes(collective, length, pb, dp_sizes, word_bytes)
+    per_axis = pattern_axes(
+        collective, length, pb, dp_sizes, word_bytes, participants
+    )
     by = 0.0
     msgs = 0
     for b, g in per_axis:

@@ -1,0 +1,315 @@
+"""Partial-participation / staleness-aware round schedules (ISSUE 4 tentpole).
+
+The paper's setting is fully synchronous: every round, all ``N`` workers'
+sparsified gradients reach the server, which broadcasts the weighted sum.
+Real data-parallel fleets are not: stragglers miss the aggregation
+deadline, and asynchronous pipelines apply their payloads rounds late.
+Because RegTop-k's posterior statistics condition on the *last broadcast
+aggregate* (``g_agg_prev``), who actually participated in a round directly
+interacts with the paper's central object — accumulated error — which is
+what ``benchmarks/straggler_bench.py`` measures.
+
+A :class:`Participation` is a deterministic per-round schedule over the
+flat data-parallel worker group. It composes with *every* registered
+collective through one rule — mask, then renormalize the aggregation
+weights (:func:`renormalize_weights`, surfaced as
+:meth:`Participation.participating_weights`) — rather than being baked
+into any one strategy: ``Collective.reference`` accepts the per-round
+``[N]`` mask and renormalizes internally, while ``Collective.shard``
+takes the worker's own mask entry, every worker deriving the round's
+weights locally from the shared schedule (see
+:mod:`repro.comm.collectives`).
+
+Schedules (``kind``):
+
+* ``full``        — every worker, every round. Guaranteed bit-for-bit
+  identical to the no-participation code paths (callers skip the
+  participation logic entirely at trace time when :attr:`is_full`).
+* ``bernoulli``   — each worker independently drops with probability
+  ``drop_rate`` (PRNG seeded by ``(seed, round)``, so the schedule is
+  common knowledge: every worker can compute the round's mask locally
+  without extra communication). Worker ``round % N`` is always kept so a
+  round can never lose *all* workers (the renormalization stays finite).
+* ``round_robin`` — deterministic stragglers: ``n_stragglers`` consecutive
+  workers, rotating by ``n_stragglers`` per round, miss each round. The
+  worst-case-fair pattern (every worker is a straggler equally often).
+* ``stale``       — bounded-staleness async on top of the ``round_robin``
+  drop pattern: a straggler's payload is not lost but arrives
+  ``staleness`` rounds late and is applied with weight
+  ``discount * omega_n`` (*not* renormalized — the late payload is extra
+  mass on top of that round's renormalized on-time aggregate). The
+  undelivered-payload state lives with the aggregator (see
+  ``DistributedSim`` in ``src/repro/core/simulator.py``); each payload is
+  delivered exactly once, at most ``staleness`` rounds after it was
+  produced.
+
+Dropped workers (``bernoulli`` / ``round_robin``) keep their whole
+accumulated gradient in the error accumulator ``eps`` — error feedback
+covers non-participation exactly like it covers sparsification — and
+their posterior statistics (``a_prev``/``s_prev``) stay frozen at the
+last round they actually sent, since the server never saw the skipped
+payload. ``stale`` workers did send (late), so their state advances
+normally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PARTICIPATION_KINDS = ("full", "bernoulli", "round_robin", "stale")
+
+
+@dataclasses.dataclass(frozen=True)
+class Participation:
+    """Deterministic per-round participation schedule over ``N`` workers.
+
+    >>> Participation("full").is_full
+    True
+    >>> Participation("round_robin", n_stragglers=2).kind
+    'round_robin'
+    >>> Participation("bogus")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown participation kind 'bogus'; available: \
+['full', 'bernoulli', 'round_robin', 'stale']
+    """
+
+    kind: str = "full"
+    drop_rate: float = 0.0  # bernoulli: per-worker drop probability
+    n_stragglers: int = 1  # round_robin/stale: dropped per round
+    staleness: int = 1  # stale: rounds until the late payload lands
+    discount: float = 1.0  # stale: weight multiplier on late payloads
+    seed: int = 0  # bernoulli PRNG seed
+
+    def __post_init__(self):
+        if self.kind not in PARTICIPATION_KINDS:
+            raise ValueError(
+                f"unknown participation kind {self.kind!r}; available: "
+                f"{list(PARTICIPATION_KINDS)}"
+            )
+        if not 0.0 <= self.drop_rate < 1.0:
+            raise ValueError(
+                f"drop_rate must be in [0, 1), got {self.drop_rate}"
+            )
+        if self.n_stragglers < 1:
+            raise ValueError(
+                f"n_stragglers must be >= 1, got {self.n_stragglers}"
+            )
+        if self.staleness < 1:
+            raise ValueError(
+                f"staleness must be >= 1, got {self.staleness}"
+            )
+        if self.discount < 0.0:
+            raise ValueError(
+                f"discount must be >= 0, got {self.discount}"
+            )
+
+    # -- schedule queries ---------------------------------------------------
+    @property
+    def is_full(self) -> bool:
+        """True when the schedule never drops anyone — callers use this to
+        skip participation logic entirely at trace time, which is what
+        makes ``Participation("full")`` bit-for-bit identical to the
+        historical all-workers-every-round paths."""
+        return self.kind == "full" or (
+            self.kind == "bernoulli" and self.drop_rate == 0.0
+        )
+
+    @property
+    def delays_payloads(self) -> bool:
+        """True when dropped payloads are delivered late (``stale``) rather
+        than kept in the worker's error accumulator."""
+        return self.kind == "stale"
+
+    def validate(self, n_workers: int) -> "Participation":
+        """Check the schedule is realizable over ``n_workers`` (e.g. the
+        round-robin straggler count must leave at least one participant).
+
+        >>> Participation("round_robin", n_stragglers=4).validate(4)
+        Traceback (most recent call last):
+            ...
+        ValueError: n_stragglers=4 would drop every one of the 4 workers
+        >>> Participation("bernoulli", drop_rate=0.5).validate(1)
+        Traceback (most recent call last):
+            ...
+        ValueError: a non-full participation schedule needs a dp group of \
+at least 2 workers, got 1
+        """
+        if not self.is_full and n_workers < 2:
+            raise ValueError(
+                "a non-full participation schedule needs a dp group of "
+                f"at least 2 workers, got {n_workers}"
+            )
+        if (
+            self.kind in ("round_robin", "stale")
+            and self.n_stragglers >= n_workers
+        ):
+            raise ValueError(
+                f"n_stragglers={self.n_stragglers} would drop every one "
+                f"of the {n_workers} workers"
+            )
+        return self
+
+    def round_mask(self, round_idx, n_workers: int) -> jax.Array:
+        """``{0,1}`` float mask ``[N]`` of the round's participants.
+
+        Pure function of ``(schedule, round_idx)`` — common knowledge, so
+        every worker (and the cost model) computes it without
+        communication. ``round_idx`` may be a traced scalar (the schedule
+        is jit/scan-friendly).
+
+        >>> Participation("round_robin", n_stragglers=1).round_mask(0, 4).tolist()
+        [0.0, 1.0, 1.0, 1.0]
+        >>> Participation("round_robin", n_stragglers=1).round_mask(2, 4).tolist()
+        [1.0, 1.0, 0.0, 1.0]
+        """
+        n = int(n_workers)
+        if self.is_full:
+            return jnp.ones((n,), jnp.float32)
+        r = jnp.asarray(round_idx, jnp.int32)
+        if self.kind == "bernoulli":
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), r)
+            keep = jax.random.bernoulli(key, 1.0 - self.drop_rate, (n,))
+            # liveness: one rotating worker always participates, so the
+            # renormalized weights are always well defined.
+            keep = keep.at[jnp.mod(r, n)].set(True)
+            return keep.astype(jnp.float32)
+        # round_robin / stale: n_stragglers consecutive workers rotate out
+        ns = min(int(self.n_stragglers), n - 1)
+        dropped = jnp.mod(r * ns + jnp.arange(ns), n)
+        return jnp.ones((n,), jnp.float32).at[dropped].set(0.0)
+
+    def participating_weights(
+        self, weights: jax.Array, round_idx
+    ) -> jax.Array:
+        """The round's effective aggregation weights — base ``omega_n``
+        masked to the participants and renormalized to sum to one (zero on
+        dropped workers). Reference-form aggregation (the simulator,
+        ``Collective.reference``) consumes exactly this; the shard forms
+        derive the same weights locally from :meth:`round_mask` (one
+        common participant weight for the gathered stack, the worker's own
+        mask entry to silence its payload).
+
+        >>> import jax.numpy as jnp
+        >>> p = Participation("round_robin", n_stragglers=1)
+        >>> p.participating_weights(jnp.full((4,), 0.25), 0).tolist()
+        [0.0, 0.3333333432674408, 0.3333333432674408, 0.3333333432674408]
+        """
+        w = jnp.asarray(weights)
+        if self.is_full:
+            return w
+        mask = self.round_mask(round_idx, w.shape[0])
+        return renormalize_weights(w, mask)
+
+    def expected_participants(self, n_workers: int) -> float:
+        """Expected number of on-time workers per round — what the cost
+        model prices a partial round with (see ``participants=`` on
+        :func:`repro.comm.cost.pattern_axes`). The resulting figures
+        describe the *synchronous round's critical path*; under ``stale``
+        the stragglers' payload bytes are delayed, not saved (the
+        amortized wire volume is unchanged), so treat the partial byte
+        figure as per-round, not as a bandwidth saving.
+
+        >>> Participation("round_robin", n_stragglers=2).expected_participants(8)
+        6.0
+        >>> Participation("bernoulli", drop_rate=0.5).expected_participants(9)
+        5.0
+        """
+        n = int(n_workers)
+        if self.is_full:
+            return float(n)
+        if self.kind == "bernoulli":
+            # the rotating liveness worker always participates
+            return 1.0 + (n - 1) * (1.0 - self.drop_rate)
+        return float(n - min(int(self.n_stragglers), n - 1))
+
+
+def renormalize_weights(weights: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mask + renormalize aggregation weights: ``w*m / sum(w*m)``.
+
+    Conservation invariant (tested in ``tests/test_stragglers.py``): the
+    result is zero on dropped workers and sums to one whenever at least
+    one participant has positive base weight.
+
+    >>> import jax.numpy as jnp
+    >>> renormalize_weights(jnp.array([0.25, 0.25, 0.25, 0.25]),
+    ...                     jnp.array([1.0, 0.0, 1.0, 0.0])).tolist()
+    [0.5, 0.0, 0.5, 0.0]
+    """
+    wm = jnp.asarray(weights) * jnp.asarray(mask)
+    return wm / jnp.maximum(wm.sum(), jnp.finfo(jnp.float32).tiny)
+
+
+def worker_index(
+    dp_axes: Sequence[str], dp_sizes: Sequence[int]
+) -> jax.Array:
+    """This worker's flat index over the dp mesh axes (outermost first) —
+    callable only inside ``shard_map``. Matches the worker ordering of the
+    simulator's leading vmap axis and of :meth:`Participation.round_mask`.
+
+    >>> wid = worker_index(("pod", "data"), (2, 4))  # doctest: +SKIP
+    """
+    wid = jnp.zeros((), jnp.int32)
+    for ax, size in zip(dp_axes, dp_sizes):
+        wid = wid * int(size) + jax.lax.axis_index(ax)
+    return wid
+
+
+def parse_participation(spec: Optional[str]) -> Participation:
+    """Parse the train CLI's ``--participation`` spec.
+
+    Grammar: ``kind[:a[,b[,c]]]`` with positional parameters per kind —
+    ``bernoulli:drop_rate[,seed]``, ``round_robin:n_stragglers``,
+    ``stale:n_stragglers[,staleness[,discount]]``; bare ``full`` (or an
+    empty/None spec) is full participation.
+
+    >>> parse_participation("bernoulli:0.25").drop_rate
+    0.25
+    >>> parse_participation("stale:1,2,0.5")
+    Participation(kind='stale', drop_rate=0.0, n_stragglers=1, staleness=2, \
+discount=0.5, seed=0)
+    >>> parse_participation("full").is_full
+    True
+    """
+    if not spec:
+        return Participation("full")
+    kind, _, rest = spec.strip().partition(":")
+    kind = kind.strip()
+    args = [a.strip() for a in rest.split(",") if a.strip()] if rest else []
+    try:
+        if kind == "full":
+            if args:
+                raise ValueError("'full' takes no parameters")
+            return Participation("full")
+        if kind == "bernoulli":
+            if not 1 <= len(args) <= 2:
+                raise ValueError("expected bernoulli:drop_rate[,seed]")
+            return Participation(
+                "bernoulli",
+                drop_rate=float(args[0]),
+                seed=int(args[1]) if len(args) > 1 else 0,
+            )
+        if kind == "round_robin":
+            if len(args) != 1:
+                raise ValueError("expected round_robin:n_stragglers")
+            return Participation("round_robin", n_stragglers=int(args[0]))
+        if kind == "stale":
+            if not 1 <= len(args) <= 3:
+                raise ValueError(
+                    "expected stale:n_stragglers[,staleness[,discount]]"
+                )
+            return Participation(
+                "stale",
+                n_stragglers=int(args[0]),
+                staleness=int(args[1]) if len(args) > 1 else 1,
+                discount=float(args[2]) if len(args) > 2 else 1.0,
+            )
+    except ValueError as e:
+        raise ValueError(f"bad --participation spec {spec!r}: {e}") from None
+    raise ValueError(
+        f"bad --participation spec {spec!r}: unknown kind {kind!r}; "
+        f"available: {list(PARTICIPATION_KINDS)}"
+    )

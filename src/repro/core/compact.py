@@ -89,7 +89,11 @@ def compact_select(
         raise ValueError(f"unsupported compact kind {cfg.kind!r}")
     if cfg.selector == "exact":
         _, idx = jax.lax.top_k(score, k)
-        return a, a[idx], idx
+        # zero scores are never selected (parity with exact_topk_mask):
+        # unfilled slots keep their (distinct) top-k index but carry value
+        # 0 — a no-op contribution on the wire, and no duplicate indices
+        # for the scatter consumers downstream.
+        return a, a[idx] * (score[idx] > 0), idx
     if cfg.selector == "threshold":
         mask = sel_lib.threshold_topk_mask(score, k)
         vals, idx = sel_lib.mask_to_payload(mask, a, k)
@@ -108,8 +112,17 @@ def compact_finalize(
     agg: jax.Array,
 ) -> CompactState:
     """Post-aggregation state update (needs the aggregated gradient to
-    record sent_g for the next round's posterior distortion)."""
-    eps_new = a.at[idx].set(0.0)
+    record sent_g for the next round's posterior distortion).
+
+    ``eps' = a - scatter_add(vals, idx)``: exactly zero at genuinely sent
+    coordinates (``vals == a[idx]`` there, and ``x - x == 0`` in floats),
+    and — unlike an ``a.at[idx].set(0)`` — it keeps the full accumulated
+    value at any *padding* slot (value 0 riding a real index, produced
+    when fewer than k coordinates have nonzero score, or by
+    ``mask_to_payload``'s (0, 0) pairs), so an unsent coordinate is never
+    silently dropped from error feedback."""
+    sent_dense = jnp.zeros_like(a).at[idx].add(vals)
+    eps_new = a - sent_dense
     return CompactState(
         eps=eps_new,
         sent_vals=vals,

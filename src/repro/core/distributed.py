@@ -73,9 +73,23 @@ class DistConfig:
     # topology is what makes collective="hierarchical" plannable: under a
     # uniform model it never strictly beats min(dense, allgather).
     link_topo: Optional[comm.LinkTopo] = None
+    # partial-participation round schedule over the flat dp worker group
+    # (comm.Participation; train.py's --participation). None (or a "full"
+    # schedule) is the historical all-workers path, bit-for-bit. Dropping
+    # schedules (bernoulli / round_robin) run in this shard_map runtime;
+    # bounded-staleness ("stale") delivery needs the server-side pending
+    # buffer and is simulator-only for now (DistributedSim).
+    participation: Optional[comm.Participation] = None
 
     def resolved_collective(self) -> str:
         return self.collective or self.aggregation
+
+    def resolved_participation(self) -> Optional[comm.Participation]:
+        """The active (non-full) schedule, or None when every round is
+        full — callers skip participation logic entirely on None."""
+        if self.participation is None or self.participation.is_full:
+            return None
+        return self.participation
 
     def resolved_link_model(self) -> comm.LinkModel:
         """The link model auto-planning scores with: the per-axis topology
@@ -148,6 +162,7 @@ def build_plan(params_shape, specs, mesh, sparsity: float,
         dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
         model = dist.resolved_link_model()
         word_bytes = jnp.dtype(_DT[dist.state_dtype]).itemsize
+        participants = _dist_participants(dist, mesh)
         codecs = None if dist.codec == "auto" else [dist.codec]
         if dist.sparsifier.kind in ("none", "hard_threshold"):
             # no fixed-k payload exists: a *free* collective axis can only
@@ -176,6 +191,7 @@ def build_plan(params_shape, specs, mesh, sparsity: float,
             ll, k, dp_sizes, model,
             codecs=codecs, collectives=collectives,
             allow_lossy=allow_lossy, word_bytes=word_bytes,
+            participants=participants,
         )
         return LeafPlan(
             tuple(leaf.shape), ls, ll, k, spec, d.codec, d.collective
@@ -232,7 +248,8 @@ def init_sparsifier_state(plan, W: int, mesh, dp_axes, dtype, shardings=None):
 # ---------------------------------------------------------------------------
 # the sparsify+aggregate shard_map stage
 # ---------------------------------------------------------------------------
-def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes):
+def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
+              part_ctx=None):
     """Local (worker x model-shard) view: g [1, *local], st with leading
     [1(,1)] axes. Returns (agg local shard [*local], new state).
 
@@ -241,6 +258,16 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes):
     strategies encode the fixed-k payload with ``codec``, run the collective,
     and error-feed back against the *decoded* contribution so lossy codecs
     (``coo_q8``) keep their residual in ``eps``.
+
+    ``part_ctx`` (``(m, w_part)``, computed once per round by
+    ``make_sparsify_aggregate`` from the shared schedule) makes the round
+    partial: ``m`` is this worker's ``{0,1}`` mask entry and ``w_part``
+    the renormalized participant weight ``1/|P_t|``. Participants
+    aggregate with ``w_part``; a dropped worker keeps its whole
+    accumulated gradient in ``eps`` with its posterior statistics
+    (``sent_*``) frozen at the last round the server actually saw it —
+    error feedback covers non-participation exactly like sparsification.
+    ``part_ctx=None`` is the historical full round, bit-for-bit.
     """
     gl = g[0].reshape(p.local_len)
     stl = C.CompactState(
@@ -250,14 +277,29 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes):
         sent_idx=st.sent_idx[0, 0],
         t=st.t[0],
     )
+    if part_ctx is not None:
+        m, w_part = part_ctx
     if scfg.kind == "none":
-        agg = jax.lax.pmean(gl.astype(jnp.float32), dp_axes).astype(gl.dtype)
+        if part_ctx is None:
+            agg = jax.lax.pmean(
+                gl.astype(jnp.float32), dp_axes
+            ).astype(gl.dtype)
+        else:
+            # no error state: a dropped worker's gradient is simply lost
+            agg = jax.lax.psum(
+                gl.astype(jnp.float32) * (m * w_part), dp_axes
+            ).astype(gl.dtype)
         new = stl._replace(t=stl.t + 1)
     else:
         a, vals, idx = C.compact_select(scfg, stl, gl, p.k)
+        omega = scfg.omega if part_ctx is None else w_part
+        shard_mask = None if part_ctx is None else m
         if collective == "dense_allreduce":
-            ghat = jnp.zeros_like(a).at[idx].set(vals)
-            agg = jax.lax.psum(ghat * scfg.omega, dp_axes)
+            # scatter-ADD: payload padding (value 0 on a real or duplicate
+            # index) must be a no-op, never overwrite a live contribution
+            ghat = jnp.zeros_like(a).at[idx].add(vals)
+            w = omega if part_ctx is None else omega * m
+            agg = jax.lax.psum(ghat * w, dp_axes)
             new = C.compact_finalize(stl, a, vals, idx, agg)
         else:
             payload = codec.encode(vals, idx, p.local_len)
@@ -267,9 +309,21 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes):
             )
             strategy = comm.get_collective(collective)
             agg = strategy.shard(
-                codec, payload, p.local_len, dp_axes, scfg.omega
+                codec, payload, p.local_len, dp_axes, omega,
+                participation=shard_mask,
             ).astype(a.dtype)
             new = C.compact_finalize_sent(stl, a, dvals, didx, sent_dense, agg)
+        if part_ctx is not None:
+            dropped = C.CompactState(
+                eps=a,
+                sent_vals=stl.sent_vals,
+                sent_g=stl.sent_g,
+                sent_idx=stl.sent_idx,
+                t=stl.t + 1,
+            )
+            new = jax.tree.map(
+                lambda live, gone: jnp.where(m > 0, live, gone), new, dropped
+            )
     new_out = C.CompactState(
         eps=new.eps.reshape((1,) + p.local_shape),
         sent_vals=new.sent_vals[None, None],
@@ -285,7 +339,27 @@ def make_sparsify_aggregate(
 ):
     dp = tuple(dist.dp_axes)
     dp_spec = dp if len(dp) > 1 else dp[0]
-    scfg = dataclasses.replace(dist.sparsifier, omega=1.0 / n_workers)
+    dp_sizes = tuple(int(mesh.shape[a]) for a in dp)
+    part = dist.resolved_participation()
+    if part is not None:
+        part.validate(n_workers)
+        if part.delays_payloads:
+            raise ValueError(
+                "participation kind 'stale' (bounded-staleness delivery) "
+                "needs the server-side pending buffer and is simulator-only "
+                "for now — use DistributedSim(participation=...), or a "
+                "dropping schedule ('bernoulli'/'round_robin') here"
+            )
+    # RegTop-k's posterior distortion subtracts this worker's own
+    # contribution omega*a_prev from the broadcast; under a partial
+    # schedule the server aggregated it with the *renormalized* weight
+    # 1/|P_t|, so that is the omega the posterior must condition on —
+    # exact for fixed-size schedules (round_robin), the expected weight
+    # for bernoulli's varying |P_t|.
+    omega = 1.0 / (
+        n_workers if part is None else part.expected_participants(n_workers)
+    )
+    scfg = dataclasses.replace(dist.sparsifier, omega=omega)
     plan_flat, plan_def = jax.tree.flatten(plan, is_leaf=_is_plan)
     # per-leaf wire choices (one global pair when the plan carries none);
     # resolve + validate every distinct pair up front — fail fast.
@@ -298,8 +372,17 @@ def make_sparsify_aggregate(
     def body(grads, state):
         g_flat = plan_def.flatten_up_to(grads)
         s_flat = plan_def.flatten_up_to(state)
+        part_ctx = None
+        if part is not None:
+            # one mask per round, shared by every leaf (all leaf round
+            # counters advance in lockstep): this worker's mask entry and
+            # the common renormalized participant weight 1/|P_t| (the
+            # runtime's omega is uniform, so w*m/sum(w*m) reduces to it).
+            pmask = part.round_mask(s_flat[0].t[0], n_workers)
+            m = pmask[comm.worker_index(dp, dp_sizes)]
+            part_ctx = (m, 1.0 / jnp.maximum(pmask.sum(), 1.0))
         outs = [
-            _spa_leaf(g, s, p, scfg, codec, sname, dp)
+            _spa_leaf(g, s, p, scfg, codec, sname, dp, part_ctx)
             for g, s, p, codec, (_, sname) in zip(
                 g_flat, s_flat, plan_flat, leaf_codecs, wires
             )
@@ -321,6 +404,17 @@ def make_sparsify_aggregate(
 # ---------------------------------------------------------------------------
 # communication accounting (repro.comm.cost over the per-leaf plan)
 # ---------------------------------------------------------------------------
+def _dist_participants(dist: DistConfig, mesh) -> Optional[float]:
+    """Expected on-time workers per round under ``dist.participation`` —
+    what partial-round cost accounting and auto-planning price with; None
+    when every round is full."""
+    part = dist.resolved_participation()
+    if part is None:
+        return None
+    W = int(np.prod([mesh.shape[a] for a in dist.dp_axes]))
+    return part.validate(W).expected_participants(W)
+
+
 def _leaf_wire_patterns(plan, dist: DistConfig):
     """Yield ``(leaf, codec, effective_collective, word_bytes, dense_wire)``
     with the word-sizing rules shared by byte and cost accounting: the
@@ -352,12 +446,22 @@ def comm_round_bytes(plan, dist: DistConfig, mesh) -> Tuple[int, int]:
     leaves — each with its *own* (codec, collective) when the plan carries
     per-leaf choices. Predicted comes from the codec's bit accounting;
     measured from the actual encoded buffer shapes (via ``jax.eval_shape``
-    — exact, since payload shapes are static)."""
+    — exact, since payload shapes are static).
+
+    Under a partial-participation schedule the *predicted* side prices the
+    idealized partial round (only participants' payloads move — what a
+    straggler-aware transport would ship), while the *measured* side stays
+    the full round: the SPMD runtime still gathers every worker's
+    (zero-masked) full-size buffer, so that is what actually crosses the
+    wire. ``measured - predicted`` is the transport headroom a
+    sparse-membership collective would recover."""
     dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
+    participants = _dist_participants(dist, mesh)
     pred = meas = 0
     for p, codec, coll, wb, dense_wire in _leaf_wire_patterns(plan, dist):
         pred += comm.predicted_bytes(
-            codec, coll, p.local_len, p.k, dp_sizes, word_bytes=wb
+            codec, coll, p.local_len, p.k, dp_sizes, word_bytes=wb,
+            participants=participants,
         )
         payload_shape = {} if dense_wire else jax.eval_shape(
             lambda v, i, c=codec, L=p.local_len: c.encode(v, i, L),
@@ -376,14 +480,18 @@ def comm_round_cost(plan, dist: DistConfig, mesh) -> comm.CostEstimate:
     :class:`~repro.comm.cost.LinkTopo` when configured, so a slow outer
     axis shows up in the round seconds exactly as the planner scored it.
     Word sizing is shared with :func:`comm_round_bytes` via
-    ``_leaf_wire_patterns``."""
+    ``_leaf_wire_patterns``; a partial-participation schedule prices the
+    expected partial round (strictly cheaper than full on any charged
+    axis with more than one worker)."""
     dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
     model = dist.resolved_link_model()
+    participants = _dist_participants(dist, mesh)
     total_bytes = total_msgs = 0
     total_seconds = 0.0
     for p, codec, coll, wb, _ in _leaf_wire_patterns(plan, dist):
         est = comm.predict(
-            codec, coll, p.local_len, p.k, dp_sizes, model, word_bytes=wb
+            codec, coll, p.local_len, p.k, dp_sizes, model, word_bytes=wb,
+            participants=participants,
         )
         total_bytes += est.bytes_on_wire
         total_msgs += est.n_messages

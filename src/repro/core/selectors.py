@@ -27,9 +27,16 @@ import jax.numpy as jnp
 def exact_topk_mask(score: jax.Array, k: int) -> jax.Array:
     """Exact top-k mask via ``lax.top_k`` (ties broken by index order).
 
+    A zero score carries no gradient and is never selected (the same
+    contract the PR-2 fix gave :func:`threshold_topk_mask`), so the mask
+    cardinality is ``min(k, #nonzero scores)`` — fewer than ``k`` only
+    when the score vector itself has fewer than ``k`` live entries.
+
     >>> import jax.numpy as jnp
     >>> exact_topk_mask(jnp.array([0.1, 3.0, 0.2, 2.0]), 2).tolist()
     [0.0, 1.0, 0.0, 1.0]
+    >>> exact_topk_mask(jnp.array([0.0, 3.0, 0.0, 0.0]), 2).tolist()
+    [0.0, 1.0, 0.0, 0.0]
     """
     if score.ndim != 1:
         raise ValueError(f"score must be 1-D, got {score.shape}")
@@ -37,9 +44,10 @@ def exact_topk_mask(score: jax.Array, k: int) -> jax.Array:
     if k <= 0:
         return jnp.zeros_like(score)
     if k >= score.shape[0]:
-        return jnp.ones_like(score)
+        return (score > 0).astype(score.dtype)
     _, idx = jax.lax.top_k(score, k)
-    return jnp.zeros_like(score).at[idx].set(1.0)
+    mask = jnp.zeros_like(score).at[idx].set(1.0)
+    return mask * (score > 0)
 
 
 def threshold_topk_mask(

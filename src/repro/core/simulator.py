@@ -36,6 +36,12 @@ class SimState(NamedTuple):
     worker_states: SparsifierState  # leaves with leading [N]
     g_agg_prev: jax.Array  # [J]  last broadcast aggregated gradient
     step: jax.Array  # scalar int32
+    # per-worker undelivered-payload state (bounded-staleness schedules
+    # only; None otherwise): the server-side buffer of weighted, discounted
+    # contributions produced by stragglers and not yet broadcast, plus the
+    # rounds-to-delivery countdown (0 = empty slot).
+    pending: Optional[jax.Array] = None  # [N, J]
+    pending_age: Optional[jax.Array] = None  # [N] int32
 
 
 @dataclasses.dataclass
@@ -61,11 +67,26 @@ class DistributedSim:
     link_model: Optional[comm.AlphaBeta] = None  # drives "auto" planning
     link_topo: Optional[comm.LinkTopo] = None  # per-axis; wins over scalar
     dp_shape: Optional[Tuple[int, ...]] = None  # notional dp mesh factoring
+    # partial-participation / staleness round schedule; None == full. A
+    # full schedule is bit-for-bit identical to the no-participation path
+    # (the participation logic is skipped entirely at trace time).
+    participation: Optional[comm.Participation] = None
 
     def __post_init__(self):
+        if self.participation is not None:
+            self.participation.validate(self.n_workers)
         # uniform server weights omega_n = 1/N (paper's arithmetic mean);
-        # keep the sparsifier's omega consistent with the aggregation.
-        cfg = dataclasses.replace(self.sparsifier_cfg, omega=1.0 / self.n_workers)
+        # keep the sparsifier's omega consistent with the aggregation. A
+        # partial schedule aggregates participants with the renormalized
+        # weight 1/|P_t| — the omega RegTop-k's posterior must subtract
+        # its own contribution with (exact for fixed-size schedules, the
+        # expected weight for bernoulli).
+        omega = 1.0 / (
+            self.n_workers
+            if not self._participation_active
+            else self.participation.expected_participants(self.n_workers)
+        )
+        cfg = dataclasses.replace(self.sparsifier_cfg, omega=omega)
         self.sparsifier: Sparsifier = make_sparsifier(cfg)
         self.weights = jnp.full((self.n_workers,), 1.0 / self.n_workers)
         dp = tuple(int(s) for s in self.dp_shape) if self.dp_shape else (
@@ -104,6 +125,7 @@ class DistributedSim:
                 codecs=codecs,
                 collectives=colls,
                 allow_lossy=self.codec != "auto",
+                participants=self._participants,
             )
             if self.codec == "auto":
                 self.codec = d.codec
@@ -125,6 +147,18 @@ class DistributedSim:
         return self.collective or self.aggregation
 
     @property
+    def _participation_active(self) -> bool:
+        return self.participation is not None and not self.participation.is_full
+
+    @property
+    def _participants(self) -> Optional[float]:
+        """Expected on-time workers per round for cost/planning (None when
+        every round is full)."""
+        if not self._participation_active:
+            return None
+        return self.participation.expected_participants(self.n_workers)
+
+    @property
     def resolved_link_model(self) -> comm.LinkModel:
         """Per-axis topology when given, else scalar model, else defaults."""
         if self.link_topo is not None:
@@ -136,29 +170,70 @@ class DistributedSim:
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (self.n_workers,) + x.shape), single
         )
+        stale = (
+            self._participation_active and self.participation.delays_payloads
+        )
         return SimState(
             theta=theta0,
             worker_states=stacked,
             g_agg_prev=jnp.zeros((self.length,), theta0.dtype),
             step=jnp.zeros((), jnp.int32),
+            pending=(
+                jnp.zeros((self.n_workers, self.length), theta0.dtype)
+                if stale
+                else None
+            ),
+            pending_age=(
+                jnp.zeros((self.n_workers,), jnp.int32) if stale else None
+            ),
         )
 
     def step_fn(self, state: SimState) -> Tuple[SimState, jax.Array]:
-        """One synchronous round; returns (new_state, aggregated_gradient)."""
+        """One synchronous round; returns (new_state, aggregated_gradient).
+
+        Under a partial-participation schedule, a round aggregates only
+        the participating workers with renormalized weights; dropped
+        workers keep their full accumulated gradient in ``eps`` (error
+        feedback covers non-participation) with their posterior statistics
+        frozen at the last round they sent, while ``stale`` schedules
+        instead park the straggler's weighted, discounted contribution in
+        the per-worker ``pending`` buffer and fold it into the broadcast
+        exactly once, ``staleness`` rounds late. ``g_agg_prev`` is always
+        exactly what the server broadcast — late deliveries included —
+        which is what RegTop-k's posterior conditions on next round.
+        """
         widx = jnp.arange(self.n_workers)
         grads = jax.vmap(self.grad_fn, in_axes=(None, 0))(state.theta, widx)
 
         ghat, mask, new_ws = jax.vmap(
             self.sparsifier.step, in_axes=(0, 0, None)
         )(state.worker_states, grads, state.g_agg_prev)
+        # sparsifier invariant (tested): eps' + ghat == accumulated a —
+        # recoverable here before any codec error feedback touches eps.
+        a_stack = new_ws.eps + ghat
+
+        part = self.participation
+        partial = self._participation_active
+        stale = partial and part.delays_payloads
+        pmask = (
+            part.round_mask(state.step, self.n_workers) if partial else None
+        )
 
         # kind="none" has no fixed-k payload (the mask is all-ones): always
         # aggregate dense, exactly like the distributed runtime's _spa_leaf.
-        if (
+        dense_path = (
             self.resolved_collective == "dense_allreduce"
             or self.sparsifier_cfg.kind == "none"
-        ):
-            g_agg = aggregate.dense_mean(ghat, self.weights)
+        )
+        sent_stack = None  # per-worker dense contribution (stale delivery)
+        if dense_path:
+            w = (
+                part.participating_weights(self.weights, state.step)
+                if partial
+                else self.weights
+            )
+            g_agg = aggregate.dense_mean(ghat, w)
+            sent_stack = ghat
         else:
             codec, L = self._codec, self.length
             k = sel_lib.sparsity_to_k(L, self.sparsifier.cfg.sparsity)
@@ -184,8 +259,68 @@ class DistributedSim:
                     # for momentum/staleness — leave those untouched.
                     new_ws = new_ws._replace(a_prev=new_ws.a_prev + delta)
             g_agg = self._strategy.reference(
-                codec, payloads, self.weights, L
+                codec, payloads, self.weights, L, participation=pmask
             ).astype(ghat.dtype)
+            if stale:
+                sent_stack = jax.vmap(
+                    lambda p: codec.decoded_dense(p, L)
+                )(payloads).astype(ghat.dtype)
+
+        pending, pending_age = state.pending, state.pending_age
+        if partial and not stale:
+            # dropped workers sent nothing: their whole accumulated
+            # gradient stays in eps, and their posterior statistics keep
+            # pointing at the last round the server actually saw them.
+            old_ws = state.worker_states
+            dropped_ws = SparsifierState(
+                # kind="none" carries no error state: a dropped worker's
+                # gradient is simply lost (that is the cost this PR's
+                # benchmark measures); every accumulating kind keeps it.
+                eps=(
+                    new_ws.eps
+                    if self.sparsifier_cfg.kind == "none"
+                    else a_stack
+                ),
+                a_prev=old_ws.a_prev,
+                s_prev=old_ws.s_prev,
+                t=new_ws.t,
+            )
+            new_ws = jax.tree.map(
+                lambda live, gone: jnp.where(
+                    pmask.reshape((-1,) + (1,) * (live.ndim - 1)) > 0,
+                    live,
+                    gone,
+                ),
+                new_ws,
+                dropped_ws,
+            )
+        elif stale:
+            # bounded-staleness delivery: this round's stragglers park
+            # omega_n * discount * (their decoded contribution); buffered
+            # payloads land exactly once — when their countdown hits one,
+            # or early if their worker straggles again first.
+            dropped = 1.0 - pmask
+            deliver = (pending_age > 0) & (
+                (pending_age == 1) | (dropped > 0)
+            )
+            delivered = (
+                deliver.astype(g_agg.dtype)[:, None] * pending
+            ).sum(axis=0)
+            g_agg = g_agg + delivered.astype(g_agg.dtype)
+            new_contrib = (
+                (dropped * self.weights * part.discount)[:, None]
+                * sent_stack
+            )
+            pending = jnp.where(
+                dropped[:, None] > 0,
+                new_contrib,
+                jnp.where(deliver[:, None], 0.0, pending),
+            )
+            pending_age = jnp.where(
+                dropped > 0,
+                part.staleness,
+                jnp.where(deliver, 0, jnp.maximum(pending_age - 1, 0)),
+            ).astype(jnp.int32)
 
         theta = state.theta - self.learning_rate * g_agg
         new_state = SimState(
@@ -193,6 +328,8 @@ class DistributedSim:
             worker_states=new_ws,
             g_agg_prev=g_agg,
             step=state.step + 1,
+            pending=pending,
+            pending_age=pending_age,
         )
         return new_state, g_agg
 
@@ -210,6 +347,7 @@ class DistributedSim:
             k,
             self._dp_sizes,
             self.resolved_link_model if model is None else model,
+            participants=self._participants,
         )
 
     def run(

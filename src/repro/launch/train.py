@@ -61,6 +61,15 @@ def main():
                          "collectives before auto-planning (per dp axis "
                          "on multi-axis meshes; ignored when --link-topo "
                          "is given)")
+    ap.add_argument("--participation", default=None, metavar="SPEC",
+                    help="partial-participation schedule over the dp "
+                         "worker group: 'full' (default), "
+                         "'bernoulli:drop_rate[,seed]', or "
+                         "'round_robin:n_stragglers' — dropped workers "
+                         "keep their payload in the error accumulator and "
+                         "the round aggregates with renormalized weights "
+                         "('stale:...' bounded-staleness delivery is "
+                         "simulator-only)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default="host", choices=["host", "production"])
@@ -134,6 +143,20 @@ def main():
                 flush=True,
             )
 
+    participation = None
+    if args.participation:
+        from repro import comm
+
+        participation = comm.parse_participation(args.participation)
+        participation.validate(W)
+        if not participation.is_full:
+            print(
+                f"participation: {participation.kind} — expected "
+                f"{participation.expected_participants(W):.2f}/{W} workers "
+                "on time per round (renormalized weights)",
+                flush=True,
+            )
+
     dist = DistConfig(
         sparsifier=SparsifierConfig(
             kind=args.sparsifier, sparsity=args.sparsity, mu=args.mu
@@ -146,6 +169,7 @@ def main():
         dp_axes=dp_axes,
         link_model=link_model,
         link_topo=link_topo,
+        participation=participation,
     )
     mod = get_family(cfg)
     asm = assemble(mod, cfg, dist, mesh)

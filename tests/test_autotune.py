@@ -481,6 +481,24 @@ def test_calibrate_topo_single_device_falls_back():
     assert all(not c.calibrated for c in res.per_axis)
 
 
+def test_time_collective_probe_runs_in_process():
+    """The probe harness itself (shard_map ladder + median timing) on the
+    in-process single-device mesh: a 1-worker dp group moves nothing, so
+    the sample's ring pattern is (0 messages, 0 bytes), but the probe
+    still executes and reports a positive wall time."""
+    from repro.comm import calibrate as cal
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    for coll in ("dense_allreduce", "sparse_allgather"):
+        s = cal.time_collective(mesh, ("data",), 512, coll, iters=2)
+        assert (s.collective, s.length) == (coll, 512)
+        assert s.n_messages == 0 and s.bytes_on_wire == 0
+        assert s.seconds > 0
+    with pytest.raises(ValueError, match="not implemented"):
+        cal.time_collective(mesh, ("data",), 512, "hierarchical")
+
+
 def test_calibrate_rejects_dp_axes_without_mesh():
     """dp_axes name axes of a specific mesh; without it the entry points
     must refuse rather than silently probe a different topology."""

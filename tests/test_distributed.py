@@ -115,6 +115,42 @@ def test_compact_zero_gradient_round_threshold_selector():
     np.testing.assert_array_equal(np.asarray(idx), 0)
 
 
+def test_compact_exact_padding_never_destroys_live_coordinates():
+    """Regression: with fewer than k nonzero scores, the exact selector's
+    padding slots must not collide with a genuinely selected coordinate 0
+    (a duplicate-index scatter-set silently dropped its gradient from
+    both the aggregate and error feedback)."""
+    from repro.core.compact import compact_init
+
+    L, k = 8, 4
+    g = jnp.zeros(L).at[jnp.array([0, 3])].set(jnp.array([5.0, 3.0]))
+    cfg = SparsifierConfig(kind="topk", sparsity=k / L)
+    st = compact_init(L, k)
+    a, vals, idx = compact_select(cfg, st, g, k)
+    # payload indices are distinct -> scatter set/add agree downstream
+    assert len(set(np.asarray(idx).tolist())) == k
+    ghat = np.zeros(L)
+    np.add.at(ghat, np.asarray(idx), np.asarray(vals))
+    np.testing.assert_allclose(ghat, np.asarray(g))  # 5.0 survives
+    st2 = compact_finalize(st, a, vals, idx, jnp.zeros(L))
+    # error conservation: eps' + sent == a, for every coordinate
+    np.testing.assert_allclose(
+        np.asarray(st2.eps) + ghat, np.asarray(a), rtol=1e-6
+    )
+    # the (0, j)-padded threshold payload conserves too
+    mask = jnp.zeros(L).at[3].set(1.0)  # cardinality 1 < k
+    from repro.core.selectors import mask_to_payload
+
+    pv, pi = mask_to_payload(mask, a, k)
+    st3 = compact_finalize(st, a, pv, pi, jnp.zeros(L))
+    sent = np.zeros(L)
+    np.add.at(sent, np.asarray(pi), np.asarray(pv))
+    np.testing.assert_allclose(
+        np.asarray(st3.eps) + sent, np.asarray(a), rtol=1e-6
+    )
+    assert float(st3.eps[0]) == 5.0  # unsent coordinate 0 stays in eps
+
+
 def test_compact_cyclic_covers_all_coordinates():
     L, k = 20, 6
     cfg = SparsifierConfig(kind="cyclic", sparsity=k / L)

@@ -58,6 +58,7 @@ COMM_MODULES = [
     "repro.comm.cost",
     "repro.comm.autotune",
     "repro.comm.calibrate",
+    "repro.comm.participation",
 ]
 
 

@@ -18,34 +18,69 @@ def _rand(key, shape, dtype=jnp.float32, scale=3.0):
 
 
 # ---------------------------------------------------------------------------
-# regtopk_score
+# kernel <-> reference parity matrix (ISSUE 4 satellite): every kernel vs
+# its kernels/ref.py oracle over dtype x y x shape — including
+# non-multiple-of-block lengths through the ops wrappers — parameterized
+# instead of hand-picked cases.
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("shape", SHAPES)
+PARITY_DTYPES = ["float32", "bfloat16"]
+PARITY_YS = [0.5, 1.0, 2.0]
+# one tile-aligned length, two that exercise the pad/unpad path
+PARITY_LENGTHS = [100, 8192, 10_000]
+
+
+def _parity_inputs(n, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    dt = jnp.dtype(dtype)
+    a, a_prev, g_prev = (_rand(k, (n,)).astype(dt) for k in ks[:3])
+    s_prev = (jax.random.uniform(ks[3], (n,)) > 0.5).astype(dt)
+    return a, a_prev, s_prev, g_prev
+
+
+@pytest.mark.parametrize("dtype", PARITY_DTYPES)
+@pytest.mark.parametrize("y", PARITY_YS)
+@pytest.mark.parametrize("n", PARITY_LENGTHS)
+def test_regtopk_score_parity_matrix(dtype, y, n):
+    """ops.regtopk_score == the jnp oracle on the same (f32-cast, as the
+    wrapper's layout contract specifies) inputs, over the full grid."""
+    a, a_prev, s_prev, g_prev = _parity_inputs(n, dtype)
+    got = ops.regtopk_score(a, a_prev, s_prev, g_prev, omega=0.25, mu=1.5,
+                            y=y, interpret=True)
+    f32 = [x.astype(jnp.float32) for x in (a, a_prev, s_prev, g_prev)]
+    want = ref.regtopk_score_ref(*f32, omega=0.25, mu=1.5, y=y)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_regtopk_score_large_multi_tile():
+    """64-tile (65,536-element) ops-wrapper parity — the grid's lengths
+    stay small for speed, so keep one large case that exercises many-tile
+    grid logic (was test_regtopk_score_ops_arbitrary_length's top size)."""
+    n = 65_536
+    a, a_prev, s_prev, g_prev = _parity_inputs(n, "float32", seed=1)
+    got = ops.regtopk_score(a, a_prev, s_prev, g_prev, omega=0.1, mu=2.0,
+                            interpret=True)
+    want = ref.regtopk_score_ref(a, a_prev, s_prev, g_prev, omega=0.1,
+                                 mu=2.0)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
 @pytest.mark.parametrize("mu", [0.5, 1.0, 7.3])
-def test_regtopk_score_matches_ref(shape, mu):
+def test_regtopk_score_raw_kernel_mu_sweep(mu):
+    """The raw tiled kernel against the oracle across the mu range."""
+    shape = (16, 1024)
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     a, a_prev, g_prev = (_rand(k, shape) for k in ks[:3])
     s_prev = (jax.random.uniform(ks[3], shape) > 0.5).astype(jnp.float32)
-    omega = 0.05
-    got = raw_score(a, a_prev, s_prev, g_prev, omega=omega, mu=mu,
+    got = raw_score(a, a_prev, s_prev, g_prev, omega=0.05, mu=mu,
                     interpret=True)
-    want = ref.regtopk_score_ref(a, a_prev, s_prev, g_prev, omega=omega, mu=mu)
+    want = ref.regtopk_score_ref(a, a_prev, s_prev, g_prev, omega=0.05,
+                                 mu=mu)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-6)
-
-
-@pytest.mark.parametrize("n", [100, 8192, 10_000, 65_536])
-def test_regtopk_score_ops_arbitrary_length(n):
-    """ops wrapper: flatten/pad/unpad roundtrip over odd sizes."""
-    ks = jax.random.split(jax.random.PRNGKey(1), 4)
-    a, a_prev, g_prev = (_rand(k, (n,)) for k in ks[:3])
-    s_prev = (jax.random.uniform(ks[3], (n,)) > 0.3).astype(jnp.float32)
-    got = ops.regtopk_score(a, a_prev, s_prev, g_prev, omega=0.1, mu=2.0,
-                            interpret=True)
-    want = ref.regtopk_score_ref(a, a_prev, s_prev, g_prev, omega=0.1, mu=2.0)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-6)
-    assert got.shape == (n,)
 
 
 def test_regtopk_score_zero_denominator_no_nan():
@@ -74,16 +109,14 @@ def test_regtopk_score_matches_dense_sparsifier_scoring():
                                rtol=1e-4, atol=1e-6)
 
 
-@pytest.mark.parametrize("y", [0.5, 1.0, 2.0])
+@pytest.mark.parametrize("y", PARITY_YS)
 def test_regtopk_score_y_exponent_matches_dense(y):
     """Contract: the kernel must match RegTopK._score — including the
     Remark-4 prior exponent y (regression: the kernel ignored y)."""
     from repro.core.sparsify import SparsifierConfig, SparsifierState, RegTopK
 
-    n = 8192  # 8 x 1024 tiles for the raw-kernel comparison below
-    ks = jax.random.split(jax.random.PRNGKey(8), 4)
-    a, a_prev, g_prev = (_rand(k, (n,)) for k in ks[:3])
-    s_prev = (jax.random.uniform(ks[3], (n,)) > 0.5).astype(jnp.float32)
+    n = 8192
+    a, a_prev, s_prev, g_prev = _parity_inputs(n, "float32", seed=8)
     cfg = SparsifierConfig(kind="regtopk", mu=1.5, omega=0.25, y=y)
     sp = RegTopK(cfg)
     st_ = SparsifierState(eps=jnp.zeros(n), a_prev=a_prev, s_prev=s_prev,
@@ -93,26 +126,31 @@ def test_regtopk_score_y_exponent_matches_dense(y):
                             y=y, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-6)
-    # the raw kernel agrees with the y-aware jnp oracle too
-    raw = raw_score(
-        _tile_like(a), _tile_like(a_prev), _tile_like(s_prev),
-        _tile_like(g_prev), omega=0.25, mu=1.5, y=y, interpret=True,
-    )
-    oracle = ref.regtopk_score_ref(
-        _tile_like(a), _tile_like(a_prev), _tile_like(s_prev),
-        _tile_like(g_prev), omega=0.25, mu=1.5, y=y,
-    )
-    np.testing.assert_allclose(np.asarray(raw), np.asarray(oracle),
-                               rtol=1e-4, atol=1e-6)
-
-
-def _tile_like(x):
-    return x.reshape(-1, 1024)
 
 
 # ---------------------------------------------------------------------------
 # threshold_topk
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", PARITY_DTYPES)
+@pytest.mark.parametrize("n", PARITY_LENGTHS)
+def test_threshold_topk_parity_matrix(dtype, n):
+    """ops.threshold_topk_mask == the pure-jnp selector on the f32-cast
+    flat score — dtype x shape grid including pad/unpad lengths (zero
+    padding must never be selected)."""
+    from repro.core.selectors import threshold_topk_mask as sel_mask
+
+    score = jnp.abs(_rand(jax.random.PRNGKey(11), (n,))).astype(
+        jnp.dtype(dtype)
+    )
+    k = max(1, n // 50)
+    got = ops.threshold_topk_mask(score, k, interpret=True)
+    want = sel_mask(score.astype(jnp.float32), k)
+    assert got.shape == (n,)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(want).astype(got.dtype)
+    )
+
+
 @pytest.mark.parametrize("shape", SHAPES)
 def test_count_and_max_kernels(shape):
     score = jnp.abs(_rand(jax.random.PRNGKey(3), shape))
@@ -150,6 +188,24 @@ def test_block_topk_candidates_match_ref(shape, m):
     rvals, ridx = ref.block_topk_candidates_ref(score, m=m)
     np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+
+
+@pytest.mark.parametrize("dtype", PARITY_DTYPES)
+@pytest.mark.parametrize("n", PARITY_LENGTHS)
+def test_hierarchical_topk_parity_matrix(dtype, n):
+    """ops.hierarchical_topk (block candidates + exact reduce, through the
+    pad/unpad layout) recovers exactly lax.top_k on the f32-cast score for
+    small k — dtype x non-multiple-of-block length grid."""
+    score = jnp.abs(_rand(jax.random.PRNGKey(12), (n,))).astype(
+        jnp.dtype(dtype)
+    )
+    k = 4
+    vals, idx = ops.hierarchical_topk(score, k, m=8, interpret=True)
+    want_v, want_i = jax.lax.top_k(score.astype(jnp.float32).reshape(-1), k)
+    np.testing.assert_allclose(
+        np.asarray(vals), np.asarray(want_v), rtol=1e-6
+    )
+    assert set(np.asarray(idx).tolist()) == set(np.asarray(want_i).tolist())
 
 
 def test_threshold_topk_zero_score_kernel_matches_selector_fix():

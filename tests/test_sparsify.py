@@ -31,10 +31,14 @@ def test_exact_topk_mask_selects_largest():
 
 
 def test_exact_topk_edge_cases():
-    x = jnp.arange(4.0)
+    """k <= 0 selects nothing; k >= J selects every *live* (nonzero-score)
+    entry — a zero score carries no gradient and is never selected, the
+    same contract the PR-2 fix gave the threshold selector."""
+    x = jnp.arange(4.0)  # score 0.0 at index 0
     np.testing.assert_array_equal(exact_topk_mask(x, 0), jnp.zeros(4))
-    np.testing.assert_array_equal(exact_topk_mask(x, 4), jnp.ones(4))
-    np.testing.assert_array_equal(exact_topk_mask(x, 9), jnp.ones(4))
+    np.testing.assert_array_equal(exact_topk_mask(x, 4), [0, 1, 1, 1])
+    np.testing.assert_array_equal(exact_topk_mask(x, 9), [0, 1, 1, 1])
+    np.testing.assert_array_equal(exact_topk_mask(jnp.zeros(4), 2), 0.0)
 
 
 @settings(max_examples=50, deadline=None)
@@ -45,11 +49,17 @@ def test_exact_topk_edge_cases():
     st.integers(1, 64),
 )
 def test_exact_topk_cardinality_and_dominance(vals, k):
+    """Selector invariant net (ISSUE 4 satellite): cardinality is exactly
+    min(k, #nonzero scores) — never above k — zero scores are never
+    selected, and every selected score dominates every unselected one."""
     x = jnp.asarray(vals, jnp.float32)
     k = min(k, x.shape[0])
     score = jnp.abs(x)
     m = np.asarray(exact_topk_mask(score, k))
-    assert int(m.sum()) == k
+    n_live = int((np.asarray(score) > 0).sum())
+    assert int(m.sum()) == min(k, n_live)
+    assert int(m.sum()) <= k
+    assert not np.any(np.asarray(score)[m > 0] == 0.0)
     # every selected score >= every unselected score
     sel = np.asarray(score)[m > 0]
     unsel = np.asarray(score)[m == 0]
@@ -79,6 +89,14 @@ def test_threshold_topk_superset_of_k(vals, k):
     if n_pos >= k:
         kth = np.sort(np.asarray(score))[-k]
         assert np.asarray(score)[m > 0].min() <= kth + 1e-6
+    # cardinality stays at k whenever the bisection can separate the k-th
+    # and (k+1)-th scores (ties / sub-resolution gaps legitimately exceed
+    # k, so only assert when the gap clears the bisection's resolution)
+    # (the bisection runs in float32, so its resolution bottoms out near
+    # the f32 ulp of max(score) — demand a comfortably larger gap)
+    s = np.sort(np.asarray(score))[::-1]
+    if n_pos >= k and (len(s) == k or s[k - 1] - s[k] > s[0] * 2.0**-18):
+        assert int(m.sum()) == k
 
 
 def test_threshold_topk_zero_gradient_round():
@@ -144,6 +162,61 @@ def test_sparsity_to_k_float_ceil_regression():
             assert sparsity_to_k(J, S) == exact, (S, J)
 
 
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(1, 100_000),
+    st.floats(0.0, 1.0, allow_nan=False),
+    st.integers(1, 100_000),
+    st.floats(0.0, 1.0, allow_nan=False),
+)
+def test_sparsity_to_k_monotone_in_both_arguments(J1, S1, J2, S2):
+    """k = ceil(S*J) clipped to [1, J] is monotone in the sparsity at
+    fixed length and in the length at fixed sparsity (ISSUE 4 satellite —
+    property net over the PR-2 epsilon-tolerant ceil)."""
+    lo_S, hi_S = sorted((S1, S2))
+    assert sparsity_to_k(J1, lo_S) <= sparsity_to_k(J1, hi_S)
+    lo_J, hi_J = sorted((J1, J2))
+    assert sparsity_to_k(lo_J, S1) <= sparsity_to_k(hi_J, S1)
+    # range invariant
+    k = sparsity_to_k(J1, S1)
+    assert 1 <= k <= J1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 50_000), st.integers(1, 50_000))
+def test_sparsity_to_k_exact_on_representable_products(J, k0):
+    """For S computed as k0/J (the only way real configs produce nominally
+    integer products), the epsilon-tolerant ceil must recover exactly k0 —
+    never the k0+1 a naive ceil gives when float rounding lands S*J a few
+    ulps above the integer."""
+    k0 = min(k0, J)
+    S = k0 / J
+    assert sparsity_to_k(J, S) == k0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.floats(0, 1e3, allow_nan=False, width=32), min_size=4, max_size=64
+    ),
+    st.integers(1, 64),
+)
+def test_all_selectors_never_select_zero_scores(vals, k):
+    """Cross-selector invariant (regression net for the PR-2 zero-score
+    fixes): no registered selector ever selects a zero-score coordinate,
+    and the exact selector never exceeds cardinality k."""
+    from repro.core.selectors import SELECTORS
+
+    score = jnp.asarray(vals, jnp.float32)
+    k = min(k, score.shape[0])
+    for name, select in SELECTORS.items():
+        m = np.asarray(select(score, k))
+        assert set(np.unique(m)) <= {0.0, 1.0}, name
+        assert not np.any(np.asarray(score)[m > 0] == 0.0), name
+        if name == "exact":
+            assert int(m.sum()) <= k
+
+
 def test_sparsity_to_k_shifts_leaf_plan_and_wire_bytes():
     """The off-by-one propagated into LeafPlan.k and the byte accounting:
     at S=0.07, J=100 each coo_fp32 payload is 8 B/coordinate — one
@@ -206,8 +279,9 @@ def test_error_conservation(vals, S):
 def test_mask_cardinality_topk(vals):
     g = jnp.asarray(vals, jnp.float32)
     k = sparsity_to_k(g.shape[0], 0.25)
+    n_live = int((np.abs(np.asarray(g)) > 0).sum())
     sp, (ghat, mask, ns) = _step("topk", g, sparsity=0.25)
-    assert int(np.asarray(mask).sum()) == k
+    assert int(np.asarray(mask).sum()) == min(k, n_live)
     assert int((np.asarray(ghat) != 0).sum()) <= k
 
 

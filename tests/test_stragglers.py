@@ -1,0 +1,538 @@
+"""Partial-participation / straggler-tolerant collectives (ISSUE 4 tentpole).
+
+Covers the `repro.comm.participation` layer end to end: full-participation
+schedules are bit-for-bit identical to the historical all-workers path for
+every collective; dropped-worker rounds conserve the renormalized weights;
+bounded-staleness delivery applies each buffered payload exactly once; and
+a subprocess shard_map run checks partial-round dense <-> payload
+equivalence in the real runtime.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro import comm
+from repro.core import DistributedSim, SparsifierConfig
+
+COLLECTIVES = ["dense_allreduce", "sparse_allgather", "hierarchical"]
+
+
+def _linreg_setup(n_workers=4, rows=8, dim=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (n_workers, rows, dim))
+    theta_star = jax.random.normal(jax.random.fold_in(key, 1), (dim,))
+    y = jnp.einsum("nij,j->ni", A, theta_star)
+
+    def grad_fn(theta, n):
+        r = A[n] @ theta - y[n]
+        return A[n].T @ r / rows
+
+    return grad_fn, theta_star, dim
+
+
+# ---------------------------------------------------------------------------
+# schedule masks
+# ---------------------------------------------------------------------------
+def test_full_mask_is_all_ones():
+    p = comm.Participation("full")
+    assert p.is_full
+    np.testing.assert_array_equal(np.asarray(p.round_mask(0, 6)), 1.0)
+    np.testing.assert_array_equal(np.asarray(p.round_mask(17, 6)), 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 100))
+def test_round_robin_drops_exactly_n_stragglers(n_workers, round_idx):
+    ns = max(1, n_workers // 3)
+    p = comm.Participation("round_robin", n_stragglers=ns)
+    m = np.asarray(p.round_mask(round_idx, n_workers))
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    assert int((1 - m).sum()) == ns
+
+
+def test_round_robin_rotates_over_every_worker():
+    n = 6
+    p = comm.Participation("round_robin", n_stragglers=1)
+    dropped = set()
+    for r in range(n):
+        m = np.asarray(p.round_mask(r, n))
+        dropped.update(np.nonzero(m == 0)[0].tolist())
+    assert dropped == set(range(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 200))
+def test_bernoulli_always_keeps_at_least_one(round_idx):
+    p = comm.Participation("bernoulli", drop_rate=0.95, seed=3)
+    m = np.asarray(p.round_mask(round_idx, 8))
+    assert m.sum() >= 1
+    assert m[round_idx % 8] == 1.0  # the rotating liveness worker
+
+
+def test_bernoulli_is_deterministic_common_knowledge():
+    p = comm.Participation("bernoulli", drop_rate=0.5, seed=7)
+    m1 = np.asarray(p.round_mask(13, 8))
+    m2 = np.asarray(p.round_mask(13, 8))
+    np.testing.assert_array_equal(m1, m2)
+    # jit/scan-friendly with a traced round index
+    m3 = np.asarray(jax.jit(lambda r: p.round_mask(r, 8))(13))
+    np.testing.assert_array_equal(m1, m3)
+
+
+def test_participation_validation():
+    with pytest.raises(ValueError, match="unknown participation kind"):
+        comm.Participation("bogus")
+    with pytest.raises(ValueError, match="drop_rate"):
+        comm.Participation("bernoulli", drop_rate=1.0)
+    with pytest.raises(ValueError, match="n_stragglers"):
+        comm.Participation("round_robin", n_stragglers=0)
+    with pytest.raises(ValueError, match="every one"):
+        comm.Participation("round_robin", n_stragglers=4).validate(4)
+    comm.Participation("round_robin", n_stragglers=3).validate(4)
+    # any non-full schedule needs a real (>1 worker) dp group
+    with pytest.raises(ValueError, match="at least 2 workers"):
+        comm.Participation("bernoulli", drop_rate=0.5).validate(1)
+    comm.Participation("full").validate(1)
+
+
+def test_parse_participation_specs():
+    assert comm.parse_participation(None).is_full
+    assert comm.parse_participation("full").is_full
+    p = comm.parse_participation("bernoulli:0.25,11")
+    assert (p.kind, p.drop_rate, p.seed) == ("bernoulli", 0.25, 11)
+    p = comm.parse_participation("round_robin:2")
+    assert (p.kind, p.n_stragglers) == ("round_robin", 2)
+    p = comm.parse_participation("stale:1,3,0.5")
+    assert (p.kind, p.staleness, p.discount) == ("stale", 3, 0.5)
+    for bad in ("nope", "bernoulli", "round_robin:1,2", "full:1",
+                "stale:1,2,3,4"):
+        with pytest.raises(ValueError, match="participation"):
+            comm.parse_participation(bad)
+
+
+# ---------------------------------------------------------------------------
+# weight renormalization conserves mass
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 50), st.floats(0.1, 0.9))
+def test_dropped_rounds_conserve_renormalized_weights(n, round_idx, rate):
+    """The participating_weights hook: zero on dropped workers, sums to one
+    over the participants — for every schedule and round."""
+    base = jnp.full((n,), 1.0 / n)
+    for p in (
+        comm.Participation("full"),
+        comm.Participation("bernoulli", drop_rate=rate),
+        comm.Participation("round_robin", n_stragglers=max(1, n // 2 - 1)),
+    ):
+        w = np.asarray(p.participating_weights(base, round_idx))
+        m = np.asarray(p.round_mask(round_idx, n))
+        assert w.sum() == pytest.approx(1.0, rel=1e-6)
+        np.testing.assert_array_equal(w[m == 0], 0.0)
+        if m.sum() > 0:
+            live = w[m > 0]
+            np.testing.assert_allclose(live, live[0], rtol=1e-6)
+
+
+def test_renormalize_weights_nonuniform():
+    w = jnp.array([0.1, 0.2, 0.3, 0.4])
+    m = jnp.array([1.0, 0.0, 1.0, 0.0])
+    out = np.asarray(comm.renormalize_weights(w, m))
+    np.testing.assert_allclose(out, [0.25, 0.0, 0.75, 0.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# full participation is bit-for-bit the historical path (acceptance)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("collective", COLLECTIVES)
+def test_full_participation_bitforbit(collective):
+    grad_fn, theta_star, dim = _linreg_setup()
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.25, mu=1.0)
+    base = DistributedSim(
+        grad_fn, 4, dim, cfg, learning_rate=0.05, collective=collective
+    )
+    full = DistributedSim(
+        grad_fn, 4, dim, cfg, learning_rate=0.05, collective=collective,
+        participation=comm.Participation("full"),
+    )
+    fb, tb = base.run(jnp.zeros(dim), 40)
+    ff, tf = full.run(jnp.zeros(dim), 40)
+    np.testing.assert_array_equal(np.asarray(tb), np.asarray(tf))
+    np.testing.assert_array_equal(
+        np.asarray(fb.theta), np.asarray(ff.theta)
+    )
+
+
+def test_zero_rate_bernoulli_is_full():
+    assert comm.Participation("bernoulli", drop_rate=0.0).is_full
+
+
+# ---------------------------------------------------------------------------
+# dropped workers: error feedback covers non-participation
+# ---------------------------------------------------------------------------
+def test_dropped_worker_keeps_accumulated_gradient():
+    """One partial round: the straggler's whole accumulated gradient stays
+    in eps (nothing reached the server), its posterior stats stay frozen,
+    and the broadcast is the renormalized mean of the participants."""
+    grad_fn, _, dim = _linreg_setup()
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.25, mu=1.0)
+    part = comm.Participation("round_robin", n_stragglers=1)
+    sim = DistributedSim(
+        grad_fn, 4, dim, cfg, learning_rate=0.05, participation=part
+    )
+    state = sim.init(jnp.zeros(dim))
+    grads = jax.vmap(grad_fn, in_axes=(None, 0))(
+        state.theta, jnp.arange(4)
+    )
+    new_state, g_agg = sim.step_fn(state)
+    m = np.asarray(part.round_mask(0, 4))
+    (dropped,) = np.nonzero(m == 0)[0]
+    # eps_dropped == full accumulated gradient (eps0 = 0, so == its grad)
+    np.testing.assert_allclose(
+        np.asarray(new_state.worker_states.eps[dropped]),
+        np.asarray(grads[dropped]),
+        rtol=1e-6,
+    )
+    # posterior stats frozen at the (never-sent) initial state
+    np.testing.assert_array_equal(
+        np.asarray(new_state.worker_states.s_prev[dropped]), 0.0
+    )
+    # broadcast = renormalized mean of the participants' sparsified grads
+    live = np.nonzero(m > 0)[0]
+    k = 4  # 0.25 * 16
+    expect = np.zeros(dim, np.float32)
+    for n in live:
+        g = np.asarray(grads[n])
+        idx = np.argsort(-np.abs(g))[:k]
+        expect[idx] += g[idx] / len(live)
+    np.testing.assert_allclose(np.asarray(g_agg), expect, rtol=1e-5)
+    # participants' error feedback is the usual a - ghat
+    for n in live:
+        g = np.asarray(grads[n])
+        idx = np.argsort(-np.abs(g))[:k]
+        eps_exp = g.copy()
+        eps_exp[idx] = 0.0
+        np.testing.assert_allclose(
+            np.asarray(new_state.worker_states.eps[n]), eps_exp, rtol=1e-5
+        )
+
+
+@pytest.mark.parametrize("schedule", ["round_robin", "bernoulli", "stale"])
+def test_partial_payload_collectives_match_dense(schedule):
+    """Under every schedule, sparse_allgather / hierarchical must track
+    dense_allreduce exactly — participation composes with the collective,
+    it is not baked into one."""
+    grad_fn, theta_star, dim = _linreg_setup()
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.25, mu=1.0)
+    part = {
+        "round_robin": comm.Participation("round_robin", n_stragglers=1),
+        "bernoulli": comm.Participation("bernoulli", drop_rate=0.4),
+        "stale": comm.Participation(
+            "stale", n_stragglers=1, staleness=2, discount=0.5
+        ),
+    }[schedule]
+    out = {}
+    for coll in COLLECTIVES:
+        sim = DistributedSim(
+            grad_fn, 4, dim, cfg, learning_rate=0.05, collective=coll,
+            participation=part,
+        )
+        fin, _ = sim.run(jnp.zeros(dim), 60)
+        out[coll] = np.asarray(fin.theta)
+    for coll in COLLECTIVES[1:]:
+        np.testing.assert_allclose(
+            out[coll], out["dense_allreduce"], rtol=1e-5, atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# bounded staleness: each payload delivered exactly once
+# ---------------------------------------------------------------------------
+def _run_stale_against_mirror(staleness, discount, steps, n_stragglers=1):
+    """Drive the sim with constant one-hot gradients and compare every
+    broadcast against an independent python delivery model that, by
+    construction, applies each buffered payload exactly once (at its
+    deadline, or early if its worker straggles again first)."""
+    N = 4
+    eye = jnp.eye(N)
+
+    def grad_fn(theta, n):
+        return eye[n]
+
+    part = comm.Participation(
+        "stale", n_stragglers=n_stragglers, staleness=staleness,
+        discount=discount,
+    )
+    cfg = SparsifierConfig(kind="none")
+    sim = DistributedSim(
+        grad_fn, N, N, cfg, learning_rate=0.0, participation=part
+    )
+    state = sim.init(jnp.zeros(N))
+    got = []
+    for _ in range(steps):
+        state, g = sim.step_fn(state)
+        got.append(np.asarray(g))
+
+    pending = {}  # worker -> (contribution vector, delivery deadline)
+    deliveries = {}  # (worker, stored_round) -> count
+    expect = []
+    for t in range(steps):
+        m = np.asarray(part.round_mask(t, N))
+        live = np.nonzero(m > 0)[0]
+        agg = np.zeros(N)
+        for n in live:
+            agg[n] += 1.0 / len(live)
+        dropped = np.nonzero(m == 0)[0]
+        for n in list(pending):
+            contrib, deadline, stored = pending[n]
+            if t >= deadline or n in dropped:
+                agg += contrib
+                deliveries[(n, stored)] = deliveries.get((n, stored), 0) + 1
+                del pending[n]
+        for n in dropped:
+            pending[n] = (discount * (1.0 / N) * np.eye(N)[n], t + staleness, t)
+        expect.append(agg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), rtol=1e-6)
+    assert all(c == 1 for c in deliveries.values())
+    return deliveries
+
+
+def test_stale_delivery_applies_each_payload_exactly_once():
+    # staleness shorter than the straggler rotation: clean late deliveries
+    d = _run_stale_against_mirror(staleness=2, discount=0.5, steps=16)
+    assert len(d) > 0
+
+
+def test_stale_delivery_early_flush_on_re_drop():
+    # staleness longer than the rotation period: the worker straggles again
+    # while its payload is still buffered -> the old payload must land
+    # early (exactly once), not be overwritten.
+    d = _run_stale_against_mirror(staleness=6, discount=1.0, steps=20)
+    assert len(d) > 0
+
+
+def test_stale_pending_state_shape_and_inactive_default():
+    grad_fn, _, dim = _linreg_setup()
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.25)
+    stale = DistributedSim(
+        grad_fn, 4, dim, cfg,
+        participation=comm.Participation("stale", n_stragglers=1),
+    )
+    st_ = stale.init(jnp.zeros(dim))
+    assert st_.pending.shape == (4, dim)
+    assert st_.pending_age.shape == (4,)
+    plain = DistributedSim(grad_fn, 4, dim, cfg)
+    assert plain.init(jnp.zeros(dim)).pending is None
+
+
+def test_g_agg_prev_is_what_the_server_broadcast():
+    """RegTop-k's posterior must condition on the *actual* broadcast —
+    including late deliveries — not the full-participation ideal."""
+    grad_fn, _, dim = _linreg_setup()
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.25, mu=1.0)
+    sim = DistributedSim(
+        grad_fn, 4, dim, cfg, learning_rate=0.05,
+        participation=comm.Participation(
+            "stale", n_stragglers=1, staleness=1, discount=0.5
+        ),
+    )
+    state = sim.init(jnp.zeros(dim))
+    for _ in range(3):
+        state, g = sim.step_fn(state)
+        np.testing.assert_array_equal(
+            np.asarray(state.g_agg_prev), np.asarray(g)
+        )
+
+
+# ---------------------------------------------------------------------------
+# partial-round cost accounting (acceptance: strictly below full)
+# ---------------------------------------------------------------------------
+def test_partial_round_cost_strictly_below_full():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import (
+        DistConfig,
+        LeafPlan,
+        comm_round_cost,
+    )
+
+    class _Mesh:
+        shape = {"data": 8}
+
+    plan = LeafPlan((4096,), (4096,), 4096, 64, P(None))
+    base = DistConfig(codec="coo_fp32", collective="sparse_allgather")
+    partial = dataclasses.replace(
+        base,
+        participation=comm.Participation("round_robin", n_stragglers=2),
+    )
+    full_cost = comm_round_cost(plan, base, _Mesh())
+    part_cost = comm_round_cost(plan, partial, _Mesh())
+    assert part_cost.bytes_on_wire < full_cost.bytes_on_wire
+    assert part_cost.n_messages < full_cost.n_messages
+    assert part_cost.seconds < full_cost.seconds
+    # a full schedule prices identically to no schedule at all
+    full_sched = dataclasses.replace(
+        base, participation=comm.Participation("full")
+    )
+    assert comm_round_cost(plan, full_sched, _Mesh()) == full_cost
+
+
+def test_pattern_axes_full_participants_reproduces_flat_pattern():
+    for coll in COLLECTIVES:
+        for dp in ((8,), (2, 4), (1, 4)):
+            n = int(np.prod(dp))
+            assert comm.pattern_axes(
+                coll, 4096, 512.0, dp, participants=float(n)
+            ) == comm.pattern_axes(coll, 4096, 512.0, dp)
+
+
+def test_pattern_axes_partial_monotone_in_participants():
+    by = [
+        comm.pattern_axes(
+            "sparse_allgather", 4096, 512.0, (8,), participants=p
+        )[0][0]
+        for p in (2.0, 4.0, 6.0, 8.0)
+    ]
+    assert by == sorted(by)
+    assert by[0] < by[-1]
+
+
+def test_simulator_wire_bytes_account_for_participation():
+    grad_fn, _, dim = _linreg_setup(dim=4096)
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.01)
+    full = DistributedSim(
+        grad_fn, 4, 4096, cfg, collective="sparse_allgather"
+    )
+    part = DistributedSim(
+        grad_fn, 4, 4096, cfg, collective="sparse_allgather",
+        participation=comm.Participation("round_robin", n_stragglers=1),
+    )
+    assert (
+        part.wire_bytes_per_round().bytes_on_wire
+        < full.wire_bytes_per_round().bytes_on_wire
+    )
+
+
+def test_autotune_accepts_participants():
+    d_full = comm.choose_leaf(10**6, 10**4, (8,))
+    d_part = comm.choose_leaf(10**6, 10**4, (8,), participants=5.0)
+    assert d_part.cost.seconds < d_full.cost.seconds
+
+
+# ---------------------------------------------------------------------------
+# distributed runtime guards
+# ---------------------------------------------------------------------------
+def test_runtime_rejects_stale_participation():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import (
+        DistConfig,
+        LeafPlan,
+        make_sparsify_aggregate,
+    )
+
+    class _Mesh:
+        shape = {"data": 4}
+
+    plan = {"w": LeafPlan((64,), (64,), 64, 4, P(None))}
+    dist = DistConfig(
+        participation=comm.Participation("stale", n_stragglers=1)
+    )
+    with pytest.raises(ValueError, match="simulator-only"):
+        make_sparsify_aggregate(_Mesh(), plan, None, None, dist, 4)
+
+
+def test_runtime_rejects_overfull_straggler_count():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import (
+        DistConfig,
+        LeafPlan,
+        make_sparsify_aggregate,
+    )
+
+    class _Mesh:
+        shape = {"data": 4}
+
+    plan = {"w": LeafPlan((64,), (64,), 64, 4, P(None))}
+    dist = DistConfig(
+        participation=comm.Participation("round_robin", n_stragglers=4)
+    )
+    with pytest.raises(ValueError, match="every one"):
+        make_sparsify_aggregate(_Mesh(), plan, None, None, dist, 4)
+
+
+# ---------------------------------------------------------------------------
+# shard_map runtime equivalence for partial rounds (subprocess)
+# ---------------------------------------------------------------------------
+SUB_CODE = """
+import json
+import jax, jax.numpy as jnp
+from repro.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
+from repro.models import ModelConfig, get_family
+from repro.core.distributed import (DistConfig, assemble,
+                                    init_sparsifier_state)
+from repro.core.sparsify import SparsifierConfig
+from repro.optim import OptConfig, make_optimizer
+from repro.data import TokenPipeline
+from repro import comm
+
+cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab=256, remat=False)
+mod = get_family(cfg)
+
+def train(collective, participation, steps=6):
+    dist = DistConfig(
+        sparsifier=SparsifierConfig(kind="regtopk", sparsity=0.05, mu=1.0),
+        optimizer=OptConfig(kind="adam", learning_rate=3e-3),
+        codec="coo_fp32", collective=collective, microbatches=1,
+        dp_axes=("data",), participation=participation)
+    asm = assemble(mod, cfg, dist, mesh)
+    params, _ = mod.init(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer(dist.optimizer)
+    opt_state = opt.init(params)
+    sp_state, _ = init_sparsifier_state(asm.plan, 4, mesh, ("data",),
+                                        jnp.float32)
+    pipe = TokenPipeline(cfg, global_batch=8, seq=32)
+    step = jax.jit(asm.train_step)
+    losses = []
+    with mesh:
+        for t in range(steps):
+            params, opt_state, sp_state, m = step(
+                params, opt_state, sp_state, pipe.batch_at(t))
+            losses.append(float(m["loss"]))
+    return losses
+
+base = train("dense_allreduce", None)
+full = train("dense_allreduce", comm.Participation("full"))
+rr = comm.Participation("round_robin", n_stragglers=1)
+rr_dense = train("dense_allreduce", rr)
+rr_sparse = train("sparse_allgather", rr)
+print(json.dumps({
+    "full_bitforbit": base == full,
+    "rr_diff": max(abs(a - b) for a, b in zip(rr_dense, rr_sparse)),
+    "rr_vs_base": max(abs(a - b) for a, b in zip(rr_dense, base)),
+    "rr_finite": all(x == x for x in rr_dense),
+}))
+"""
+
+
+def test_shard_map_partial_participation_round():
+    """The real shard_map runtime: Participation('full') is bit-for-bit
+    the no-participation path, and a partial (round-robin) round gives the
+    same numerics under dense_allreduce and sparse_allgather — the
+    dense <-> payload equivalence of tests/test_comm.py, held under
+    partial participation."""
+    from tests.test_distributed import run_sub
+
+    res = run_sub(SUB_CODE)
+    assert res["full_bitforbit"] is True
+    assert res["rr_finite"]
+    assert res["rr_diff"] < 1e-4
+    # the partial run actually differs from the full run (workers dropped)
+    assert res["rr_vs_base"] > 0
