@@ -11,6 +11,10 @@ a heterogeneous linear-regression problem and
 * reports predicted (codec bit accounting through the alpha–beta pattern)
   vs. measured (actual encoded buffer sizes) bytes-on-wire per round,
   asserting ``measured <= predicted * 1.05``.
+
+Standalone: ``python benchmarks/comm_bench.py --json BENCH_comm.json``
+feeds the CI perf gate (`tools/check_perf.py` vs
+`benchmarks/baselines/BENCH_comm.json`).
 """
 from __future__ import annotations
 
@@ -114,7 +118,6 @@ def run():
 
 
 if __name__ == "__main__":
-    from benchmarks.common import emit
+    from benchmarks.common import bench_main
 
-    print("name,us_per_call,derived")
-    emit(run())
+    bench_main(run, "comm_bench")

@@ -34,7 +34,12 @@ def run():
             dense = J
             sparse = N_WORKERS * int(coo.wire_bits(J, k)) // 32
             codec_bytes = ";".join(
-                f"{name}_B={comm.predicted_bytes(name, 'sparse_allgather', J, k, (N_WORKERS,))}"
+                "{}_B={}".format(
+                    name,
+                    comm.predicted_bytes(
+                        name, "sparse_allgather", J, k, (N_WORKERS,)
+                    ),
+                )
                 for name in sorted(comm.CODECS)
             )
             rows.append(

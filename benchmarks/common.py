@@ -1,14 +1,36 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Besides the CSV ``row``/``emit`` helpers, this module carries the
+machine-readable side of the perf CI gate (ISSUE 5):
+
+* :func:`write_json` — dump a bench's rows as ``{"meta": ..., "rows": ...}``
+  (the ``BENCH_*.json`` artifact format `tools/check_perf.py` consumes);
+* :func:`calibration_us` — a fixed XLA reference computation timed in the
+  same process. CI runners and dev machines differ wildly in absolute
+  speed, so the regression gate compares *calibration-normalized* timings
+  (``us_per_call / calib_us``) rather than raw microseconds;
+* :func:`bench_main` — the ``--json out.json`` CLI shared by the
+  standalone benches.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import time
-from typing import Callable, Tuple
+from typing import Callable, List
 
 import jax
+import jax.numpy as jnp
 
 
 def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
-    """Median wall-time per call in microseconds (blocking on results)."""
+    """Best wall-time per call in microseconds (blocking on results).
+
+    Min-of-iters, the standard microbenchmark reduction: scheduler and
+    frequency noise only ever add time, so the minimum is the stable
+    estimate of the code's actual cost — medians of sub-ms CPU timings
+    flap 2x run to run, which the CI perf gate cannot tolerate."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -16,8 +38,7 @@ def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 1) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return 1e6 * times[len(times) // 2]
+    return 1e6 * min(times)
 
 
 def row(name: str, us: float, derived: str) -> dict:
@@ -27,3 +48,50 @@ def row(name: str, us: float, derived: str) -> dict:
 def emit(rows) -> None:
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+def calibration_us(iters: int = 5) -> float:
+    """Machine-speed reference: a fixed 1M-element elementwise chain under
+    jit. Bench timings are divided by this before the CI regression
+    comparison, so a slower (or faster) runner shifts numerator and
+    denominator together."""
+    x = jnp.arange(1 << 20, dtype=jnp.float32)
+
+    @jax.jit
+    def ref(v):
+        return jnp.tanh(v * 1e-6).sum()
+
+    return time_call(ref, x, iters=iters)
+
+
+def bench_meta(bench: str) -> dict:
+    return {
+        "bench": bench,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "calib_us": calibration_us(),
+    }
+
+
+def write_json(path: str, bench: str, rows: List[dict]) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"meta": bench_meta(bench), "rows": rows}, f, indent=1)
+    print(f"# wrote {path} ({len(rows)} rows)")
+
+
+def bench_main(run_fn: Callable[[], List[dict]], bench: str) -> None:
+    """Standalone-bench entry point: CSV to stdout, plus the
+    ``BENCH_*.json`` artifact when ``--json`` is given."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write rows (+ calibration meta) as JSON for the CI "
+             "perf gate (tools/check_perf.py)",
+    )
+    args = ap.parse_args()
+    rows = run_fn()
+    print("name,us_per_call,derived")
+    emit(rows)
+    if args.json:
+        write_json(args.json, bench, rows)

@@ -5,7 +5,6 @@ at the server); RegTop-1 tracks centralized (unsparsified) training.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

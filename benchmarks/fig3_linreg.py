@@ -13,7 +13,6 @@ paper's own analysis converge to machine precision at every S.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

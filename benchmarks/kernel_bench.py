@@ -2,7 +2,17 @@
 
 us_per_call is CPU interpret-mode time (NOT TPU perf); the derived column
 reports the analytic HBM-traffic model that determines TPU time:
-fused regtopk_score moves 5 J-sized streams vs ~9 unfused.
+fused regtopk_score moves 5 J-sized streams vs ~9 unfused, and the fused
+select→encode pipeline (ISSUE 5 tentpole) moves 4 — the score never
+leaves registers, so the dense score write-back, the selector re-read and
+the payload gather all disappear. The ``hbm_fused_B``/``hbm_unfused_B``
+columns are asserted strictly ordered here (the acceptance criterion) and
+shared with the ``fastpath="auto"`` throughput table
+(`src/repro/comm/fastpath.py`).
+
+Standalone: ``python benchmarks/kernel_bench.py --json BENCH_kernels.json``
+feeds the CI perf gate (`tools/check_perf.py` vs
+`benchmarks/baselines/BENCH_kernels.json`).
 """
 from __future__ import annotations
 
@@ -10,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_call
+from repro.comm import fastpath
 from repro.kernels import ops, ref
 
 N = 1 << 18  # 256k elements
@@ -44,4 +55,46 @@ def run():
     hier = lambda s: ops.hierarchical_topk(s, k, m=16, interpret=True)
     rows.append(row("kernel/hierarchical_topk", time_call(hier, score, iters=3),
                     f"k={k};candidates={N // 8192 * 16}"))
+
+    # --- fused select→encode pipeline (ISSUE 5 tentpole) -----------------
+    # one pass: score in registers → per-tile candidates → compact payload.
+    # The analytic HBM column is the acceptance criterion: the fused
+    # pipeline's traffic must sit strictly below the unfused sum
+    # (score write-back + selector re-read + gather).
+    m = fastpath.candidate_budget(N, k)
+    fused_se = lambda x: ops.fused_select_encode(
+        x, a_prev, s_prev, g_prev, k=k, omega=0.05, mu=1.0, m=m,
+        interpret=True,
+    )
+    unfused_se = jax.jit(
+        lambda x: ref.fused_select_encode_ref(
+            x, a_prev, s_prev, g_prev, k, omega=0.05, mu=1.0
+        )
+    )
+    hbm_f = fastpath.fused_hbm_bytes(N, k, m)
+    hbm_u = fastpath.unfused_hbm_bytes(N, k)
+    assert hbm_f < hbm_u, (
+        f"fused pipeline HBM traffic {hbm_f} B must sit strictly below "
+        f"the unfused select→encode sum {hbm_u} B"
+    )
+    vals, idx, ok = fused_se(a)
+    assert bool(ok), "fused certificate should hold on Gaussian scores"
+    rows.append(row(
+        "kernel/fused_select_encode",
+        time_call(fused_se, a, iters=3),
+        f"k={k};m={m};hbm_fused_B={hbm_f};hbm_unfused_B={hbm_u};"
+        f"tpu_time_est={hbm_f / 819e9 * 1e6:.1f}us",
+    ))
+    rows.append(row(
+        "kernel/unfused_select_encode_ref",
+        time_call(unfused_se, a, iters=3),
+        f"k={k};hbm_B={hbm_u};"
+        f"tpu_time_est={hbm_u / 819e9 * 1e6:.1f}us",
+    ))
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+
+    bench_main(run, "kernel_bench")

@@ -72,7 +72,10 @@ def run():
                     (
                         f"coll_1pod={a['collective_bytes']['total']:.3e}B;"
                         f"coll_2pod={b['collective_bytes']['total']:.3e}B;"
-                        f"ratio={b['collective_bytes']['total'] / a['collective_bytes']['total']:.2f}"
+                        "ratio={:.2f}".format(
+                            b["collective_bytes"]["total"]
+                            / a["collective_bytes"]["total"]
+                        )
                     ),
                 )
             )

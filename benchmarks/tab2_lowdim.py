@@ -6,7 +6,6 @@ Claims: (a) Top-k never converges to the global optimum for S<1;
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

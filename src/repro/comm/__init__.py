@@ -19,6 +19,10 @@ Five layers:
   round schedules (:class:`Participation`) composing with every collective
   via renormalized per-round weights, priced by the cost model's
   ``participants=`` argument.
+* :mod:`repro.comm.fastpath`     — the fused select→encode pipeline's
+  policy layer: the fusability matrix, the measured-throughput
+  :class:`ThroughputTable` behind ``fastpath="auto"``, and the runtime
+  routing into the Pallas kernel (``repro.kernels.fused_encode``).
 
 See ``docs/comm.md`` for wire-format bit layouts, the collective ring
 patterns, and the cost-model math (including why a uniform link model can
@@ -28,8 +32,14 @@ All gradient aggregation in :mod:`repro.core.distributed` and
 :mod:`repro.core.simulator` routes through this package, selected by
 ``DistConfig.codec`` / ``DistConfig.collective`` ("auto" plans per leaf).
 """
-from repro.comm import autotune, calibrate
+from repro.comm import autotune, calibrate, fastpath
 from repro.comm.autotune import CommPlan, LeafDecision, choose_leaf, plan_tree
+from repro.comm.fastpath import (
+    FASTPATH_MODES,
+    ThroughputTable,
+    fusable,
+    fused_compact_select,
+)
 from repro.comm.calibrate import (
     Calibration,
     Sample,
@@ -92,6 +102,7 @@ __all__ = [
     "CooQ8",
     "CostEstimate",
     "DenseAllreduce",
+    "FASTPATH_MODES",
     "Hierarchical",
     "LeafDecision",
     "LinkModel",
@@ -100,6 +111,7 @@ __all__ = [
     "Participation",
     "Sample",
     "SparseAllgather",
+    "ThroughputTable",
     "TopoCalibration",
     "as_topo",
     "autotune",
@@ -107,7 +119,10 @@ __all__ = [
     "calibrate_topo",
     "choose_leaf",
     "delta_index_dtype",
+    "fastpath",
     "fit_alpha_beta",
+    "fusable",
+    "fused_compact_select",
     "get_codec",
     "get_collective",
     "measured_bytes",

@@ -45,6 +45,7 @@ from typing import Any, Optional, Sequence, Tuple
 import jax
 
 from repro.comm import cost as cost_lib
+from repro.comm import fastpath as fastpath_lib
 from repro.comm.codec import CODECS, get_codec
 from repro.comm.collectives import COLLECTIVES, get_collective
 from repro.comm.cost import (
@@ -63,11 +64,17 @@ DENSE_CANONICAL_CODEC = "coo_fp32"
 
 @dataclasses.dataclass(frozen=True)
 class LeafDecision:
-    """The planner's pick for one leaf, with its predicted cost."""
+    """The planner's pick for one leaf, with its predicted cost.
+
+    ``fused`` is the select→encode fastpath flag
+    (:mod:`repro.comm.fastpath`): whether this leaf's payload should be
+    produced by the fused Pallas pipeline. Always False when planning
+    with ``fastpath="off"`` (the default)."""
 
     codec: str
     collective: str
     cost: CostEstimate
+    fused: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,10 +154,24 @@ def choose_leaf(
     allow_lossy: bool = False,
     word_bytes: int = WORD_BYTES,
     participants: Optional[float] = None,
+    fastpath: str = "off",
+    compute: Optional[fastpath_lib.ThroughputTable] = None,
 ) -> LeafDecision:
     """Score every admissible pair with ``cost.predict``; return the argmin.
 
     Ordering is total and deterministic: (seconds, bytes, codec, collective).
+
+    ``fastpath`` prices the *compute* stage (select→encode) alongside the
+    wire cost and records the per-leaf ``fused`` flag: ``"off"`` (default)
+    prices wire only and never fuses; ``"on"`` fuses every pair the
+    fusability matrix admits; ``"auto"`` fuses where the
+    measured-throughput ``compute`` table (default: the analytic
+    HBM-traffic :class:`~repro.comm.fastpath.ThroughputTable`) says the
+    fused pipeline is faster. With a non-"off" mode each candidate pair's
+    seconds include its cheapest admissible compute path, so a fusable
+    codec can out-plan a byte-cheaper one whose encode needs the dense
+    intermediates (callers gate on ``config_fusable`` for the
+    sparsifier-side rules — this function only sees wire and shape).
 
     ``model`` is a scalar :class:`AlphaBeta` or a per-axis
     :class:`LinkTopo` (length must equal ``len(dp_sizes)``).
@@ -177,15 +198,27 @@ def choose_leaf(
     'hierarchical'
     """
     model = as_topo(model, max(len(list(dp_sizes)), 1))
+    if fastpath not in fastpath_lib.FASTPATH_MODES:
+        raise ValueError(
+            f"unknown fastpath {fastpath!r}; "
+            f"available: {fastpath_lib.FASTPATH_MODES}"
+        )
+    table = compute or fastpath_lib.ThroughputTable()
     best = None
     for cname, sname in candidate_pairs(codecs, collectives, allow_lossy):
         wb = word_bytes if sname == "dense_allreduce" else WORD_BYTES
         est = cost_lib.predict(
             cname, sname, length, k, dp_sizes, model, wb, participants
         )
-        key = (est.seconds, est.bytes_on_wire, cname, sname)
+        fused = fastpath_lib.leaf_fused(
+            fastpath, cname, sname, length, k, table
+        )
+        seconds = est.seconds
+        if fastpath != "off":
+            seconds += table.seconds(length, k, fused)
+        key = (seconds, est.bytes_on_wire, cname, sname)
         if best is None or key < best[0]:
-            best = (key, LeafDecision(cname, sname, est))
+            best = (key, LeafDecision(cname, sname, est, fused))
     return best[1]
 
 
@@ -199,6 +232,8 @@ def plan_tree(
     allow_lossy: bool = False,
     word_bytes: int = WORD_BYTES,
     participants: Optional[float] = None,
+    fastpath: str = "off",
+    compute: Optional[fastpath_lib.ThroughputTable] = None,
 ) -> CommPlan:
     """Plan every leaf of a ``LeafPlan`` pytree (``repro.core.distributed``).
 
@@ -231,6 +266,8 @@ def plan_tree(
             allow_lossy=allow_lossy,
             word_bytes=word_bytes,
             participants=participants,
+            fastpath=fastpath,
+            compute=compute,
         )
 
     decisions = jax.tree.map(

@@ -44,13 +44,32 @@ def _scatter_dense(vals: jax.Array, idx: jax.Array, length: int) -> jax.Array:
 
 class Codec:
     """Base codec. Subclasses set ``name``/``lossless`` and implement
-    ``encode``/``decode``/``wire_bits``."""
+    ``encode``/``decode``/``wire_bits``; codecs whose encoding is a pure
+    function of the k selected ``(vals, idx)`` registers additionally
+    implement :meth:`encode_fused` (and set ``supports_fused``) so the
+    fused select→encode fastpath can emit their payload without any dense
+    intermediate — see :mod:`repro.comm.fastpath`."""
 
     name: str = "base"
     lossless: bool = True
+    supports_fused: bool = False
 
     def encode(self, vals: jax.Array, idx: jax.Array, length: int) -> Payload:
         raise NotImplementedError
+
+    def encode_fused(
+        self, vals: jax.Array, idx: jax.Array, length: int
+    ) -> Payload:
+        """Optional hook: encode straight from the fused pipeline's
+        ``(vals [k], idx [k])`` output. Must produce a payload
+        bit-identical to ``encode`` on the same inputs; the difference is
+        the *contract* — no dense [L] intermediate may be touched, so the
+        epilogue fuses behind the selection kernel. Codecs whose wire
+        format is inherently dense (``bitmap_dense``) leave this
+        unimplemented."""
+        raise NotImplementedError(
+            f"codec {self.name!r} has no fused encode epilogue"
+        )
 
     def decode(
         self, payload: Payload, length: int
@@ -76,9 +95,15 @@ class CooFp32(Codec):
 
     name = "coo_fp32"
     lossless = True
+    supports_fused = True
 
     def encode(self, vals, idx, length):
         return {"vals": vals.astype(jnp.float32), "idx": idx.astype(jnp.int32)}
+
+    def encode_fused(self, vals, idx, length):
+        """Pure register passthrough — the COO payload *is* the fused
+        pipeline's output."""
+        return self.encode(vals, idx, length)
 
     def decode(self, payload, length):
         return payload["vals"], payload["idx"]
@@ -110,6 +135,12 @@ class CooIdxDelta(Codec):
 
     name = "coo_idx_delta"
     lossless = True
+    supports_fused = True
+
+    def encode_fused(self, vals, idx, length):
+        """k-sized sort + diff over the selected registers — O(k log k)
+        epilogue work, no dense intermediate."""
+        return self.encode(vals, idx, length)
 
     def encode(self, vals, idx, length):
         order = jnp.argsort(idx)
@@ -191,12 +222,20 @@ class CooQ8(Codec):
 
     name = "coo_q8"
     lossless = False
+    supports_fused = True
 
     def encode(self, vals, idx, length):
         amax = jnp.max(jnp.abs(vals))
         scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
         q = jnp.clip(jnp.round(vals / scale), -127, 127).astype(jnp.int8)
         return {"q": q, "scale": scale, "idx": idx.astype(jnp.int32)}
+
+    def encode_fused(self, vals, idx, length):
+        """Quantization epilogue over the k selected registers: the
+        per-payload amax/scale/round chain reads only the fused pipeline's
+        output, so it fuses behind the selection kernel with no dense
+        intermediate."""
+        return self.encode(vals, idx, length)
 
     def decode(self, payload, length):
         vals = payload["q"].astype(jnp.float32) * payload["scale"]

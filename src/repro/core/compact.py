@@ -21,7 +21,7 @@ one (worker × model-shard) flat vector of length L.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,13 +49,49 @@ def compact_init(length: int, k: int, dtype=jnp.float32) -> CompactState:
 
 
 def compact_select(
-    cfg: SparsifierConfig, st: CompactState, g: jax.Array, k: int
+    cfg: SparsifierConfig,
+    st: CompactState,
+    g: jax.Array,
+    k: int,
+    *,
+    fastpath: str | None = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Select coordinates. Returns (a, vals [k], idx [k]).
 
     ``a`` is the accumulated gradient; (vals, idx) the fixed-k payload.
+
+    ``fastpath`` routes fusable configs through the Pallas fused
+    select→encode pipeline (:mod:`repro.comm.fastpath`): ``"on"``/
+    ``"auto"`` fuse when the (kind, selector, shape, f32 state) admits
+    it — the result is bit-for-bit identical (a runtime exactness
+    certificate falls back to this dense path otherwise; a non-f32 state
+    would score in a different precision, so it never fuses) — while
+    ``None``/``"off"`` is the historical dense selection. ``"auto"``
+    additionally requires a TPU backend and the throughput table's
+    blessing, mirroring ``DistConfig.resolved_fastpath``.
     """
     L = g.shape[0]
+    if fastpath not in (None, "off"):
+        from repro.comm import fastpath as fp
+
+        if fastpath not in fp.FASTPATH_MODES:
+            raise ValueError(
+                f"unknown fastpath {fastpath!r}; "
+                f"available: {fp.FASTPATH_MODES}"
+            )
+        if (
+            st.eps.dtype == jnp.float32
+            and fp.config_fusable(cfg)[0]
+            and fp.shape_fusable(L, k)[0]
+            and (
+                fastpath == "on"
+                or (
+                    fp.backend_supports()
+                    and fp.ThroughputTable().prefers_fused(L, k)
+                )
+            )
+        ):
+            return fp.fused_compact_select(cfg, st, g, k)
     a = st.eps + g.astype(st.eps.dtype)
     if cfg.kind == "none":
         raise ValueError("'none' bypasses compact_select")
@@ -160,7 +196,11 @@ def compact_finalize_sent(
 # dense-state equivalence oracle (used by tests)
 # ---------------------------------------------------------------------------
 def reference_step(
-    cfg: SparsifierConfig, st: CompactState, g: jax.Array, g_prev_dense: jax.Array, k: int
+    cfg: SparsifierConfig,
+    st: CompactState,
+    g: jax.Array,
+    g_prev_dense: jax.Array,
+    k: int,
 ):
     """Reconstruct the dense-state step for equivalence testing."""
     from repro.core.sparsify import SparsifierState, make_sparsifier

@@ -30,7 +30,6 @@ optional (codec, collective) pair, filled by the alpha–beta planner
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -80,9 +79,43 @@ class DistConfig:
     # bounded-staleness ("stale") delivery needs the server-side pending
     # buffer and is simulator-only for now (DistributedSim).
     participation: Optional[comm.Participation] = None
+    # fused select→encode fastpath (repro.comm.fastpath; train.py's
+    # --fastpath): "off" (default) is the historical dense-selection path;
+    # "on" routes every fusable leaf through the Pallas fused pipeline
+    # (bit-for-bit equivalent — a runtime exactness certificate falls back
+    # per call otherwise); "auto" fuses the leaves the measured-throughput
+    # table prices faster, and resolves to "off" off-TPU where the kernels
+    # run in interpret mode.
+    fastpath: str = "off"
 
     def resolved_collective(self) -> str:
         return self.collective or self.aggregation
+
+    def resolved_fastpath(self) -> str:
+        """The effective fastpath mode, with the environment gates applied:
+        "auto" needs a TPU backend (interpret mode never wins), and the
+        fused kernels score in f32 — a bf16 ``state_dtype`` scores in bf16
+        on the unfused path, so fusing would not be bit-for-bit ("on"
+        raises; "auto" declines)."""
+        if self.fastpath not in comm.FASTPATH_MODES:
+            raise ValueError(
+                f"unknown fastpath {self.fastpath!r}; "
+                f"available: {comm.FASTPATH_MODES}"
+            )
+        if self.fastpath == "off":
+            return "off"
+        if self.state_dtype != "float32":
+            if self.fastpath == "on":
+                raise ValueError(
+                    "fastpath='on' requires state_dtype='float32': the "
+                    "fused pipeline scores in f32 while the unfused path "
+                    f"scores in {self.state_dtype} — selection would not "
+                    "be bit-for-bit"
+                )
+            return "off"
+        if self.fastpath == "auto" and not comm.fastpath.backend_supports():
+            return "off"
+        return self.fastpath
 
     def resolved_participation(self) -> Optional[comm.Participation]:
         """The active (non-full) schedule, or None when every round is
@@ -109,6 +142,10 @@ class LeafPlan(NamedTuple):
     # build_plan(..., dist=...) fills them when codec/collective is "auto".
     codec: Optional[str] = None
     collective: Optional[str] = None
+    # per-leaf fused select→encode flag; None defers to resolving
+    # DistConfig.fastpath at aggregation-build time (leaf_fastpath).
+    # build_plan(..., dist=...) fills it whenever fastpath != "off".
+    fused: Optional[bool] = None
 
 
 def _is_plan(x):
@@ -127,6 +164,25 @@ def leaf_wire(p: LeafPlan, dist: DistConfig) -> Tuple[str, str]:
             "build_plan(..., dist=dist) so per-leaf choices are resolved"
         )
     return codec, coll
+
+
+def leaf_fastpath(p: LeafPlan, dist: DistConfig) -> bool:
+    """Resolve one leaf's fused select→encode flag: the plan's own entry
+    wins (filled by ``build_plan(..., dist=...)``); otherwise the flag is
+    derived here from ``dist.resolved_fastpath()`` and the fusability
+    matrix — so plans built without ``dist`` still honor a fastpath set
+    on the config afterwards."""
+    mode = dist.resolved_fastpath()
+    if mode == "off":
+        return False
+    if p.fused is not None:
+        return p.fused
+    if not comm.fastpath.config_fusable(dist.sparsifier)[0]:
+        return False
+    cname, coll = leaf_wire(p, dist)
+    return comm.fastpath.leaf_fused(
+        mode, cname, coll, p.local_len, p.k, scfg=dist.sparsifier
+    )
 
 
 def _local_shape(shape, spec: P, mesh) -> Tuple[int, ...]:
@@ -152,12 +208,22 @@ def build_plan(params_shape, specs, mesh, sparsity: float,
     leaf's *local* shard length — tiny biases and dense-ish embedding
     shards end up on different wire formats. Fixed (non-"auto") choices
     leave the leaf fields ``None`` (global resolution via ``leaf_wire``).
+
+    With ``dist.fastpath != "off"`` each leaf also gets its fused
+    select→encode flag: under "auto" planning the planner prices the
+    compute stage per candidate pair; under fixed wire choices the flag
+    is the fusability matrix (+ throughput table for mode "auto") applied
+    to the global (codec, collective).
     """
     from repro.comm import autotune
+    from repro.comm import fastpath as fp_lib
 
     auto = dist is not None and (
         dist.codec == "auto" or (dist.collective or "") == "auto"
     )
+    fp_mode = "off" if dist is None else dist.resolved_fastpath()
+    if fp_mode != "off" and not fp_lib.config_fusable(dist.sparsifier)[0]:
+        fp_mode = "off"
     if auto:
         dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
         model = dist.resolved_link_model()
@@ -186,15 +252,23 @@ def build_plan(params_shape, specs, mesh, sparsity: float,
         ll = int(np.prod(ls)) if ls else 1
         k = sparsity_to_k(ll, sparsity)
         if not auto:
-            return LeafPlan(tuple(leaf.shape), ls, ll, k, spec)
+            fused = None
+            if fp_mode != "off":
+                fused = fp_lib.leaf_fused(
+                    fp_mode, dist.codec, dist.resolved_collective(), ll, k
+                )
+            return LeafPlan(
+                tuple(leaf.shape), ls, ll, k, spec, fused=fused
+            )
         d = autotune.choose_leaf(
             ll, k, dp_sizes, model,
             codecs=codecs, collectives=collectives,
             allow_lossy=allow_lossy, word_bytes=word_bytes,
-            participants=participants,
+            participants=participants, fastpath=fp_mode,
         )
         return LeafPlan(
-            tuple(leaf.shape), ls, ll, k, spec, d.codec, d.collective
+            tuple(leaf.shape), ls, ll, k, spec, d.codec, d.collective,
+            d.fused,
         )
 
     return jax.tree.map(mk, params_shape, specs)
@@ -249,7 +323,7 @@ def init_sparsifier_state(plan, W: int, mesh, dp_axes, dtype, shardings=None):
 # the sparsify+aggregate shard_map stage
 # ---------------------------------------------------------------------------
 def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
-              part_ctx=None):
+              part_ctx=None, fused=False):
     """Local (worker x model-shard) view: g [1, *local], st with leading
     [1(,1)] axes. Returns (agg local shard [*local], new state).
 
@@ -258,6 +332,12 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
     strategies encode the fixed-k payload with ``codec``, run the collective,
     and error-feed back against the *decoded* contribution so lossy codecs
     (``coo_q8``) keep their residual in ``eps``.
+
+    ``fused`` routes selection through the Pallas fused select→encode
+    pipeline (``compact_select(..., fastpath="on")`` +
+    ``codec.encode_fused`` — no dense score/mask/masked-gradient
+    intermediates, bit-for-bit equivalent) — callers only set it on
+    leaves the fusability matrix admits (see ``leaf_fastpath``).
 
     ``part_ctx`` (``(m, w_part)``, computed once per round by
     ``make_sparsify_aggregate`` from the shared schedule) makes the round
@@ -291,7 +371,9 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
             ).astype(gl.dtype)
         new = stl._replace(t=stl.t + 1)
     else:
-        a, vals, idx = C.compact_select(scfg, stl, gl, p.k)
+        a, vals, idx = C.compact_select(
+            scfg, stl, gl, p.k, fastpath="on" if fused else None
+        )
         omega = scfg.omega if part_ctx is None else w_part
         shard_mask = None if part_ctx is None else m
         if collective == "dense_allreduce":
@@ -302,7 +384,11 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
             agg = jax.lax.psum(ghat * w, dp_axes)
             new = C.compact_finalize(stl, a, vals, idx, agg)
         else:
-            payload = codec.encode(vals, idx, p.local_len)
+            payload = (
+                codec.encode_fused(vals, idx, p.local_len)
+                if fused
+                else codec.encode(vals, idx, p.local_len)
+            )
             dvals, didx = codec.decode(payload, p.local_len)
             sent_dense = (
                 jnp.zeros_like(a).at[didx].add(dvals.astype(a.dtype))
@@ -368,6 +454,21 @@ def make_sparsify_aggregate(
         comm.get_codec(cname)
         comm.get_collective(sname)
     leaf_codecs = [comm.get_codec(c) for c, _ in wires]
+    # per-leaf fused select→encode flags; a fused leaf must actually be
+    # fusable end to end (a stale plan flag on a non-fusable wire would
+    # call a missing encode_fused deep inside shard_map — fail fast here).
+    fused_flags = [leaf_fastpath(p, dist) for p in plan_flat]
+    for p, (cname, sname), fval in zip(plan_flat, wires, fused_flags):
+        if not fval:
+            continue
+        ok, why = comm.fusable(
+            dist.sparsifier, cname, sname, p.local_len, p.k
+        )
+        if not ok:
+            raise ValueError(
+                f"plan marks a {p.local_len}-element leaf fused but the "
+                f"({cname}, {sname}) pair is not fusable: {why}"
+            )
 
     def body(grads, state):
         g_flat = plan_def.flatten_up_to(grads)
@@ -382,9 +483,9 @@ def make_sparsify_aggregate(
             m = pmask[comm.worker_index(dp, dp_sizes)]
             part_ctx = (m, 1.0 / jnp.maximum(pmask.sum(), 1.0))
         outs = [
-            _spa_leaf(g, s, p, scfg, codec, sname, dp, part_ctx)
-            for g, s, p, codec, (_, sname) in zip(
-                g_flat, s_flat, plan_flat, leaf_codecs, wires
+            _spa_leaf(g, s, p, scfg, codec, sname, dp, part_ctx, fval)
+            for g, s, p, codec, (_, sname), fval in zip(
+                g_flat, s_flat, plan_flat, leaf_codecs, wires, fused_flags
             )
         ]
         agg = jax.tree.unflatten(plan_def, [o[0] for o in outs])

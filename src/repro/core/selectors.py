@@ -16,7 +16,6 @@ Two families:
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Tuple
 

@@ -71,8 +71,20 @@ class DistributedSim:
     # full schedule is bit-for-bit identical to the no-participation path
     # (the participation logic is skipped entirely at trace time).
     participation: Optional[comm.Participation] = None
+    # fused Pallas fastpath ("off" | "on" | "auto"): the simulator's
+    # dense-state, vmapped step fuses the *scoring* stage only (the
+    # regtopk score kernel via SparsifierConfig.score_fn — 4 reads +
+    # 1 write instead of ~9 streams); the full select→encode fusion needs
+    # the compact state layout and lives in the shard_map runtime
+    # (DistConfig.fastpath). "auto" resolves to "off" off-TPU.
+    fastpath: str = "off"
 
     def __post_init__(self):
+        if self.fastpath not in comm.FASTPATH_MODES:
+            raise ValueError(
+                f"unknown fastpath {self.fastpath!r}; "
+                f"available: {comm.FASTPATH_MODES}"
+            )
         if self.participation is not None:
             self.participation.validate(self.n_workers)
         # uniform server weights omega_n = 1/N (paper's arithmetic mean);
@@ -87,6 +99,20 @@ class DistributedSim:
             else self.participation.expected_participants(self.n_workers)
         )
         cfg = dataclasses.replace(self.sparsifier_cfg, omega=omega)
+        if (
+            cfg.kind == "regtopk"
+            and cfg.score_fn is None
+            and (
+                self.fastpath == "on"
+                or (
+                    self.fastpath == "auto"
+                    and comm.fastpath.backend_supports()
+                )
+            )
+        ):
+            cfg = dataclasses.replace(
+                cfg, score_fn=comm.fastpath.make_score_fn()
+            )
         self.sparsifier: Sparsifier = make_sparsifier(cfg)
         self.weights = jnp.full((self.n_workers,), 1.0 / self.n_workers)
         dp = tuple(int(s) for s in self.dp_shape) if self.dp_shape else (

@@ -13,7 +13,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

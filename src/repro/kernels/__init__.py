@@ -3,8 +3,18 @@
 * ``regtopk_score``  — fused Alg.2 selection metric (memory-bound chain)
 * ``threshold_topk`` — sort-free top-k via streaming count bisection
 * ``block_topk``     — per-tile top-m candidates for hierarchical top-k
+* ``fused_encode``   — one-pass score→select→payload pipeline: per-tile
+  candidates straight from score registers, host-side compaction to the
+  compact ``(idx, val)`` wire payload (``repro.comm.fastpath`` policy)
 
 ``ops`` holds the jit'd public wrappers (auto interpret-mode off-TPU);
 ``ref`` the pure-jnp oracles every kernel is allclose-tested against.
 """
-from repro.kernels import block_topk, ops, ref, regtopk_score, threshold_topk  # noqa: F401
+from repro.kernels import (  # noqa: F401
+    block_topk,
+    fused_encode,
+    ops,
+    ref,
+    regtopk_score,
+    threshold_topk,
+)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import block_topk as _bt
+from repro.kernels import fused_encode as _fe
 from repro.kernels import regtopk_score as _rs
 from repro.kernels import threshold_topk as _tt
 
@@ -51,6 +52,33 @@ def regtopk_score(
         at, pt, st, gt, omega=omega, mu=mu, q=q, y=y, interpret=interp
     )
     return out.reshape(-1)[:n].reshape(a.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "m", "omega", "mu", "q", "y", "interpret"),
+)
+def fused_select_encode(
+    a, a_prev, s_prev, g_prev, *, k, omega, mu, q=1e9, y=1.0, m=16,
+    interpret=None,
+):
+    """Fused score→select→payload over an arbitrary-shape gradient tensor.
+
+    Returns ``(vals [k], idx [k], ok)``: the compact wire payload straight
+    from the score-kernel registers, plus the exactness certificate (see
+    ``fused_encode.select_from_candidates``). ``ok`` guards bit-for-bit
+    equality with ``lax.top_k`` over the dense score — callers
+    ``lax.cond`` to the dense path when it is False. Zero-padding from the
+    layout contract scores 0 and never passes the certificate."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    at, n = _tile(a.astype(jnp.float32))
+    pt, _ = _tile(a_prev.astype(jnp.float32))
+    st, _ = _tile(s_prev.astype(jnp.float32))
+    gt, _ = _tile(g_prev.astype(jnp.float32))
+    cs, cv, ci = _fe.fused_candidates(
+        at, pt, st, gt, omega=omega, mu=mu, q=q, y=y, m=m, interpret=interp
+    )
+    return _fe.select_from_candidates(cs, cv, ci, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_iters", "interpret"))

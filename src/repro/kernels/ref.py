@@ -40,6 +40,20 @@ def threshold_topk_mask_ref(score, k, n_iters=24):
     return ((score >= lo) & (score > 0)).astype(score.dtype)
 
 
+def fused_select_encode_ref(
+    a, a_prev, s_prev, g_prev, k, *, omega, mu, q=1e9, y=1.0
+) -> Tuple[jax.Array, jax.Array]:
+    """Unfused oracle for the fused select→encode pipeline: dense score,
+    ``lax.top_k`` selection, payload gather with zero-score slots zeroed —
+    exactly the ``compact.compact_select`` exact-selector semantics the
+    fused path must reproduce bit-for-bit."""
+    score = regtopk_score_ref(
+        a, a_prev, s_prev, g_prev, omega=omega, mu=mu, q=q, y=y
+    )
+    _, idx = jax.lax.top_k(score, k)
+    return a[idx] * (score[idx] > 0), idx
+
+
 def block_topk_candidates_ref(score, m=8) -> Tuple[jax.Array, jax.Array]:
     rows, lanes = score.shape
     nblk = rows // 8

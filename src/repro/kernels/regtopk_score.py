@@ -26,13 +26,13 @@ SUBLANES = 8
 BLOCK = (SUBLANES, LANES)
 
 
-def _score_kernel(
-    a_ref, a_prev_ref, s_prev_ref, g_prev_ref, out_ref, *, omega, mu, q, y
-):
-    a = a_ref[...]
-    a_prev = a_prev_ref[...]
-    s_prev = s_prev_ref[...]
-    g_prev = g_prev_ref[...]
+def score_chain(a, a_prev, s_prev, g_prev, *, omega, mu, q, y):
+    """The Alg. 2 selection-metric op chain, in-register.
+
+    Shared by :func:`_score_kernel` and the fused select→encode kernel
+    (``fused_encode._fused_kernel``): the fused pipeline's bit-for-bit
+    equivalence argument depends on both executing this *exact* op
+    sequence, so any numerics change must live here, once."""
     denom = omega * a
     safe = jnp.where(denom == 0.0, 1.0, denom)
     delta_sent = (g_prev - omega * a_prev) / safe
@@ -41,7 +41,16 @@ def _score_kernel(
     mag = jnp.abs(a)
     if y != 1.0:  # compile-time constant: the y == 1 fast path skips the pow
         mag = mag**y
-    out_ref[...] = mag * reg
+    return mag * reg
+
+
+def _score_kernel(
+    a_ref, a_prev_ref, s_prev_ref, g_prev_ref, out_ref, *, omega, mu, q, y
+):
+    out_ref[...] = score_chain(
+        a_ref[...], a_prev_ref[...], s_prev_ref[...], g_prev_ref[...],
+        omega=omega, mu=mu, q=q, y=y,
+    )
 
 
 def regtopk_score(

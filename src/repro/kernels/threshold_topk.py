@@ -14,8 +14,6 @@ sequential, so read-modify-write accumulation is well-defined).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

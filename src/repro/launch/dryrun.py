@@ -11,7 +11,6 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -381,10 +380,12 @@ def main():
                     )
                     with open(out_path, "a") as f:
                         f.write(json.dumps(rec) + "\n")
+                    peak = rec["mem"]["peak_bytes"]
                     print(
                         f"OK    {arch} x {shape} x {mesh_name}: "
-                        f"peak={rec['mem']['peak_bytes'] and rec['mem']['peak_bytes']/2**30:.2f}GiB "
-                        f"flops={rec['flops']:.3e} coll={rec['collective_bytes']['total']:.3e}B "
+                        "peak={:.2f}GiB ".format(peak and peak / 2**30)
+                        + f"flops={rec['flops']:.3e} "
+                        f"coll={rec['collective_bytes']['total']:.3e}B "
                         f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
                         flush=True,
                     )

@@ -178,10 +178,6 @@ class HloCost:
                 bytes_ += _shape_bytes(op.type)
             # recurse into referenced computations
             if op.kind == "while":
-                refs = dict(
-                    (m.group(0).split("=")[0], m.group(1))
-                    for m in _CALL_REF.finditer(op.rest)
-                )
                 body = cond = None
                 for m in _CALL_REF.finditer(op.rest):
                     key = m.group(0).split("=")[0]

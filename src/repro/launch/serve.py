@@ -14,7 +14,6 @@ import jax.numpy as jnp
 
 from repro import configs as cfglib
 from repro.checkpoint import restore
-from repro.launch import mesh as meshlib
 from repro.models import get_family
 
 

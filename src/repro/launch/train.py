@@ -50,6 +50,13 @@ def main():
     ap.add_argument("--collective", default=None,
                     choices=["dense_allreduce", "sparse_allgather",
                              "hierarchical", "auto"])
+    ap.add_argument("--fastpath", default="off",
+                    choices=["off", "on", "auto"],
+                    help="fused Pallas select->encode pipeline: 'on' "
+                         "fuses every fusable leaf (bit-for-bit, with a "
+                         "runtime exactness fallback), 'auto' fuses the "
+                         "leaves the measured-throughput table prices "
+                         "faster (resolves to 'off' off-TPU)")
     ap.add_argument("--link-topo", default=None, metavar="SPEC",
                     help="per-dp-axis link model for auto-planning: "
                          "';'-separated 'class:alpha,beta' entries where "
@@ -170,7 +177,15 @@ def main():
         link_model=link_model,
         link_topo=link_topo,
         participation=participation,
+        fastpath=args.fastpath,
     )
+    if args.fastpath != "off":
+        print(
+            f"fastpath: {args.fastpath} (resolved "
+            f"{dist.resolved_fastpath()}) — fused select->encode on "
+            "fusable leaves",
+            flush=True,
+        )
     mod = get_family(cfg)
     asm = assemble(mod, cfg, dist, mesh)
     params, _ = mod.init(jax.random.PRNGKey(0), cfg)
@@ -213,6 +228,17 @@ def main():
         )
         for (c, s), n in sorted(picks.items()):
             print(f"comm:   auto-plan {c}/{s}: {n} leaves", flush=True)
+    if dist.resolved_fastpath() != "off":
+        from repro.core.distributed import LeafPlan, leaf_fastpath
+
+        leaves = jax.tree.leaves(
+            asm.plan, is_leaf=lambda x: isinstance(x, LeafPlan)
+        )
+        n_fused = sum(leaf_fastpath(p, dist) for p in leaves)
+        print(
+            f"comm:   fastpath: {n_fused}/{len(leaves)} leaves fused",
+            flush=True,
+        )
     t0 = time.time()
     with mesh:
         for t in range(start, start + args.steps):

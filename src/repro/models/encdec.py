@@ -191,8 +191,10 @@ def build_cross_cache(params, cfg: ModelConfig, frames: jax.Array):
     enc_out = _encode(params, cfg, frames)
 
     def per_layer(lp):
-        k = jnp.einsum("bse,ehd->bshd", enc_out, lp["cross"]["wk"].astype(enc_out.dtype))
-        v = jnp.einsum("bse,ehd->bshd", enc_out, lp["cross"]["wv"].astype(enc_out.dtype))
+        wk = lp["cross"]["wk"].astype(enc_out.dtype)
+        wv = lp["cross"]["wv"].astype(enc_out.dtype)
+        k = jnp.einsum("bse,ehd->bshd", enc_out, wk)
+        v = jnp.einsum("bse,ehd->bshd", enc_out, wv)
         return k, v
 
     ck, cv = jax.vmap(per_layer)(params["dec_layers"])

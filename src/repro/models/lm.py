@@ -11,7 +11,7 @@ online-softmax for long prefill, and cache-based for decode.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

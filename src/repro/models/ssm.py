@@ -9,7 +9,7 @@ plus trailing mamba blocks — scanned, so compile time stays depth-free.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,6 +13,8 @@ but the invariants are still exercised. Test modules import via::
 """
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

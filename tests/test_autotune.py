@@ -553,3 +553,166 @@ def test_calibrate_single_device_falls_back():
     res1 = comm.run_calibration(mesh=one, dp_axes=("data",))
     assert not res1.calibrated
     assert res1.model == comm.AlphaBeta()
+
+
+# ---------------------------------------------------------------------------
+# fused fastpath planning (ISSUE 5: per-leaf fused flag via the
+# measured-throughput table)
+# ---------------------------------------------------------------------------
+def test_choose_leaf_fastpath_off_never_fuses():
+    d = choose_leaf(65_536, 64, (8,))
+    assert d.fused is False
+    # explicit off is identical to the default
+    assert choose_leaf(65_536, 64, (8,), fastpath="off") == d
+
+
+def test_choose_leaf_fastpath_on_fuses_fusable_wire_only():
+    on = choose_leaf(
+        65_536, 64, (8,),
+        codecs=["coo_fp32"], collectives=["sparse_allgather"],
+        fastpath="on",
+    )
+    assert on.fused
+    # bitmap_dense has no fused encode epilogue (its wire format IS the
+    # dense mask); dense_allreduce moves no payload — neither ever fuses
+    bm = choose_leaf(
+        65_536, 64, (8,),
+        codecs=["bitmap_dense"], collectives=["sparse_allgather"],
+        fastpath="on",
+    )
+    assert not bm.fused
+    da = choose_leaf(
+        65_536, 64, (8,),
+        codecs=["coo_fp32"], collectives=["dense_allreduce"],
+        fastpath="on",
+    )
+    assert not da.fused
+
+
+def test_choose_leaf_fastpath_auto_prices_with_table():
+    big = choose_leaf(
+        65_536, 64, (8,),
+        codecs=["coo_fp32"], collectives=["sparse_allgather"],
+        fastpath="auto",
+    )
+    assert big.fused  # analytic default table: fused traffic is lower
+    tiny = choose_leaf(
+        100, 4, (8,),
+        codecs=["coo_fp32"], collectives=["sparse_allgather"],
+        fastpath="auto",
+    )
+    assert not tiny.fused  # one padded 8192-tile dwarfs a 100-elem leaf
+    # a table measuring the fused path slower flips the big leaf too
+    slow_fused = comm.ThroughputTable(fused_bps=1e6, unfused_bps=1e12)
+    forced = choose_leaf(
+        65_536, 64, (8,),
+        codecs=["coo_fp32"], collectives=["sparse_allgather"],
+        fastpath="auto", compute=slow_fused,
+    )
+    assert not forced.fused
+    with pytest.raises(ValueError, match="fastpath"):
+        choose_leaf(65_536, 64, (8,), fastpath="bogus")
+
+
+def test_choose_leaf_shape_gate_dense_selection_stays_unfused():
+    """k beyond the per-tile candidate budget (S ~> 1.5%) is not fusable."""
+    from repro.comm import fastpath as fp
+
+    L = 8192
+    k = 1024  # S = 12.5%
+    assert not fp.shape_fusable(L, k)[0]
+    d = choose_leaf(
+        L, k, (8,),
+        codecs=["coo_fp32"], collectives=["sparse_allgather"],
+        fastpath="on",
+    )
+    assert not d.fused
+
+
+def test_build_plan_fills_fused_flags_per_leaf():
+    """build_plan threads DistConfig.fastpath into per-leaf fused flags:
+    big fusable leaves fuse, tiny leaves under 'auto' decline (padding
+    overhead), and fastpath='off' leaves the field None."""
+
+    class _Mesh:
+        shape = {"data": 8}
+
+    shapes = {
+        "emb": jax.ShapeDtypeStruct((65_536,), jnp.float32),
+        "bias": jax.ShapeDtypeStruct((100,), jnp.float32),
+    }
+    specs = {"emb": P(None), "bias": P(None)}
+    base = DistConfig(
+        sparsifier=SparsifierConfig(kind="regtopk", sparsity=0.001),
+        codec="coo_fp32", collective="sparse_allgather",
+        dp_axes=("data",),
+    )
+    plan_off = build_plan(shapes, specs, _Mesh(), 0.001, base)
+    assert plan_off["emb"].fused is None and plan_off["bias"].fused is None
+    on = dataclasses.replace(base, fastpath="on")
+    plan_on = build_plan(shapes, specs, _Mesh(), 0.001, on)
+    assert plan_on["emb"].fused is True
+    assert plan_on["bias"].fused is True  # "on" forces every fusable leaf
+    auto = dataclasses.replace(base, fastpath="auto")
+    if jax.default_backend() == "tpu":  # pragma: no cover - TPU env
+        plan_auto = build_plan(shapes, specs, _Mesh(), 0.001, auto)
+        assert plan_auto["emb"].fused is True
+        assert plan_auto["bias"].fused is False
+    else:
+        # off-TPU "auto" resolves to "off" (interpret mode never wins)
+        plan_auto = build_plan(shapes, specs, _Mesh(), 0.001, auto)
+        assert plan_auto["emb"].fused is None
+    # a non-fusable sparsifier config zeroes the whole plan
+    thr = dataclasses.replace(
+        on,
+        sparsifier=SparsifierConfig(
+            kind="regtopk", sparsity=0.001, selector="threshold"
+        ),
+    )
+    plan_thr = build_plan(shapes, specs, _Mesh(), 0.001, thr)
+    assert plan_thr["emb"].fused is None
+
+
+def test_plan_tree_threads_fastpath():
+    tree = {
+        "emb": LeafPlan((65_536,), (65_536,), 65_536, 64, P(None)),
+        "bias": LeafPlan((100,), (100,), 100, 4, P(None)),
+    }
+    cp = plan_tree(
+        tree, (8,), codecs=["coo_fp32"],
+        collectives=["sparse_allgather"], fastpath="auto",
+    )
+    assert cp.decisions["emb"].fused is True
+    assert cp.decisions["bias"].fused is False
+
+
+def test_fusability_matrix_config_rules():
+    from repro.comm import fastpath as fp
+
+    ok = SparsifierConfig(kind="regtopk", sparsity=0.001, mu=1.0)
+    assert fp.config_fusable(ok)[0]
+    assert fp.config_fusable(
+        SparsifierConfig(kind="topk", sparsity=0.001)
+    )[0]
+    for bad in (
+        SparsifierConfig(kind="cyclic", sparsity=0.001),
+        SparsifierConfig(kind="regtopk", sparsity=0.001,
+                         selector="threshold"),
+        SparsifierConfig(kind="regtopk", sparsity=0.001, y=0.0),
+        # unsaturated regularizer: tanh((1+Q)/mu) < 1 diverges from the
+        # unfused path's untouched unsent scores
+        SparsifierConfig(kind="regtopk", sparsity=0.001, mu=1e9),
+    ):
+        assert not fp.config_fusable(bad)[0], bad
+
+
+def test_throughput_table_measure_fits_positive_rates():
+    """The measured-throughput refit actually times both paths and returns
+    usable (positive, finite) effective rates."""
+    t = comm.ThroughputTable.measure(
+        length=8192, k=8, iters=1, interpret=True
+    )
+    assert 0 < t.fused_bps < float("inf")
+    assert 0 < t.unfused_bps < float("inf")
+    # rates feed straight into the auto pricing
+    assert isinstance(t.prefers_fused(8192, 8), bool)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compact import CompactState, compact_finalize, compact_select
+from repro.core.compact import compact_finalize, compact_select
 from repro.core.sparsify import SparsifierConfig
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -186,11 +186,12 @@ SUB_TEMPLATE = textwrap.dedent(
                       vocab=256, remat=False)
     mod = get_family(cfg)
 
-    def train(kind, agg, steps=25):
+    def train(kind, agg, steps=25, sparsity=0.05, fastpath="off"):
         dist = DistConfig(
-            sparsifier=SparsifierConfig(kind=kind, sparsity=0.05, mu=1.0),
+            sparsifier=SparsifierConfig(kind=kind, sparsity=sparsity, mu=1.0),
             optimizer=OptConfig(kind="adam", learning_rate=3e-3),
-            aggregation=agg, microbatches=2, dp_axes=("data",))
+            aggregation=agg, microbatches=2, dp_axes=("data",),
+            fastpath=fastpath)
         asm = assemble(mod, cfg, dist, mesh)
         params, _ = mod.init(jax.random.PRNGKey(0), cfg)
         opt = make_optimizer(dist.optimizer)
@@ -222,6 +223,90 @@ print(json.dumps({"max_loss_diff": d, "decreased": l1[-1] < l1[0]}))
     res = run_sub(SUB_TEMPLATE.replace("{BODY}", body))
     assert res["max_loss_diff"] < 1e-4
     assert res["decreased"]
+
+
+def test_fused_fastpath_training_equivalence_multidevice():
+    """ISSUE 5 acceptance: dense↔fused training equivalence in the real
+    shard_map runtime — the fused select→encode pipeline (interpret-mode
+    Pallas inside an 8-device mesh) reproduces the unfused losses exactly
+    (the selection payload is bit-for-bit, so trajectories cannot
+    diverge)."""
+    body = """
+l1, p1 = train("regtopk", "sparse_allgather", steps=6, sparsity=0.002)
+l2, p2 = train("regtopk", "sparse_allgather", steps=6, sparsity=0.002,
+               fastpath="on")
+import jax as _j
+pdiff = max(float(abs(a - b).max())
+            for a, b in zip(_j.tree.leaves(p1), _j.tree.leaves(p2)))
+d = max(abs(a - b) for a, b in zip(l1, l2))
+print(json.dumps({"max_loss_diff": d, "max_param_diff": pdiff}))
+"""
+    res = run_sub(SUB_TEMPLATE.replace("{BODY}", body))
+    assert res["max_loss_diff"] == 0.0
+    assert res["max_param_diff"] == 0.0
+
+
+def test_compact_select_fastpath_multi_round_parity():
+    """compact_select(fastpath="on") == the dense path, bit-for-bit, over
+    an evolving multi-round regtopk state (posterior statistics scattered
+    from the compact k-vectors must reproduce the k-vector score math
+    exactly)."""
+    L, k = 10_000, 16
+    cfg = SparsifierConfig(kind="regtopk", mu=1.0, omega=0.125)
+    from repro.core.compact import compact_init
+
+    st = compact_init(L, k)
+    key = jax.random.PRNGKey(3)
+    for t in range(4):
+        key, sk = jax.random.split(key)
+        g = jax.random.normal(sk, (L,))
+        a1, v1, i1 = compact_select(cfg, st, g, k)
+        a2, v2, i2 = compact_select(cfg, st, g, k, fastpath="on")
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        agg = 0.125 * jnp.zeros(L).at[i1].add(v1)
+        st = compact_finalize(st, a1, v1, i1, agg)
+
+
+def test_fused_plan_validation_and_dtype_gate():
+    """A plan hand-marked fused on a non-fusable wire fails fast at
+    aggregation build (not deep inside shard_map); fastpath='on' with a
+    bf16 state raises (the fused kernel scores in f32 — not bit-for-bit
+    against a bf16 unfused path) while 'auto' quietly declines."""
+    import dataclasses
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh
+    from repro.core.distributed import (
+        DistConfig,
+        LeafPlan,
+        leaf_fastpath,
+        make_sparsify_aggregate,
+        sparsifier_state_shapes,
+    )
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    dist = DistConfig(
+        sparsifier=SparsifierConfig(kind="regtopk", sparsity=0.002),
+        codec="bitmap_dense", collective="sparse_allgather",
+        dp_axes=("data",), fastpath="on",
+    )
+    plan = {"w": LeafPlan((8192,), (8192,), 8192, 17, P(None), fused=True)}
+    _, sspecs = sparsifier_state_shapes(plan, 1, mesh, ("data",), jnp.float32)
+    with pytest.raises(ValueError, match="not fusable"):
+        make_sparsify_aggregate(
+            mesh, plan, {"w": P(None)}, sspecs, dist, 1
+        )
+    bf16_on = dataclasses.replace(
+        dist, codec="coo_fp32", state_dtype="bfloat16"
+    )
+    with pytest.raises(ValueError, match="float32"):
+        bf16_on.resolved_fastpath()
+    bf16_auto = dataclasses.replace(bf16_on, fastpath="auto")
+    assert bf16_auto.resolved_fastpath() == "off"
+    # the dtype gate also zeroes the per-leaf resolution
+    assert not leaf_fastpath(plan["w"], bf16_auto)
 
 
 @pytest.mark.parametrize("kind", ["topk", "cyclic", "none"])

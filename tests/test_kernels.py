@@ -219,6 +219,172 @@ def test_threshold_topk_zero_score_kernel_matches_selector_fix():
     np.testing.assert_array_equal(np.nonzero(m2)[0], [5, 900])
 
 
+# ---------------------------------------------------------------------------
+# fused select→encode pipeline (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+FUSED_LENGTHS = [100, 8192, 65_536]  # single padded tile / 1 tile / 8 tiles
+
+
+def _fused_k(n):
+    return max(2, n // 512)
+
+
+@pytest.mark.parametrize("dtype", PARITY_DTYPES)
+@pytest.mark.parametrize("n", FUSED_LENGTHS)
+@pytest.mark.parametrize("codec_name", ["coo_fp32", "coo_q8"])
+def test_fused_select_encode_parity_matrix(dtype, n, codec_name):
+    """Fused pipeline payload == the unfused oracle's, through the codec's
+    fused epilogue, bit-for-bit — dtype x length (incl. padded and
+    multi-tile) x codec grid. Inputs f32-cast per the ops layout
+    contract; the certificate must hold on Gaussian scores at these
+    shapes, so the fast path (not the fallback) is what's tested."""
+    from repro import comm
+    from repro.comm import fastpath
+
+    a, a_prev, s_prev, g_prev = (
+        x.astype(jnp.float32)
+        for x in _parity_inputs(n, dtype, seed=13)
+    )
+    k = _fused_k(n)
+    m = fastpath.candidate_budget(n, k)
+    vals, idx, ok = ops.fused_select_encode(
+        a, a_prev, s_prev, g_prev, k=k, omega=0.25, mu=1.5, m=m,
+        interpret=True,
+    )
+    assert bool(ok), "certificate should hold on Gaussian scores"
+    want_v, want_i = ref.fused_select_encode_ref(
+        a, a_prev, s_prev, g_prev, k, omega=0.25, mu=1.5
+    )
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_i))
+    codec = comm.get_codec(codec_name)
+    assert codec.supports_fused
+    fused_payload = codec.encode_fused(vals, idx, n)
+    ref_payload = codec.encode(want_v, want_i, n)
+    for key in fused_payload:
+        np.testing.assert_array_equal(
+            np.asarray(fused_payload[key]), np.asarray(ref_payload[key]),
+            err_msg=f"{codec_name} payload leaf {key!r}",
+        )
+
+
+@pytest.mark.parametrize("y", PARITY_YS)
+def test_fused_select_encode_y_exponent(y):
+    """The Remark-4 prior exponent threads through the fused score."""
+    n, k = 8192, 16
+    a, a_prev, s_prev, g_prev = _parity_inputs(n, "float32", seed=21)
+    vals, idx, ok = ops.fused_select_encode(
+        a, a_prev, s_prev, g_prev, k=k, omega=0.25, mu=1.5, y=y,
+        interpret=True,
+    )
+    assert bool(ok)
+    want_v, want_i = ref.fused_select_encode_ref(
+        a, a_prev, s_prev, g_prev, k, omega=0.25, mu=1.5, y=y
+    )
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_i))
+
+
+def test_fused_certificate_fails_on_hidden_winners():
+    """Adversarial mass concentration: more top-k winners inside one tile
+    than its candidate budget — the exactness certificate must refuse the
+    fast path (callers then lax.cond to dense selection)."""
+    n, k, m = 65_536, 20, 16
+    z = jnp.zeros(n)
+    a = z.at[jnp.arange(32)].set(jnp.arange(32, 0, -1).astype(jnp.float32))
+    _, _, ok = ops.fused_select_encode(
+        a, z, z, z, k=k, omega=0.25, mu=1.5, m=m, interpret=True
+    )
+    assert not bool(ok)
+
+
+def test_fused_certificate_fails_on_zero_scores():
+    """tau == 0 (not enough positive scores) never certifies: zero scores
+    are never selected on the fast path, which also keeps padding flat
+    indices out of the payload."""
+    n = 8192
+    z = jnp.zeros(n)
+    _, _, ok = ops.fused_select_encode(
+        z, z, z, z, k=8, omega=0.25, mu=1.5, interpret=True
+    )
+    assert not bool(ok)
+    # fewer positives than k: same story
+    a = z.at[jnp.array([5, 900])].set(3.0)
+    _, _, ok2 = ops.fused_select_encode(
+        a, z, z, z, k=8, omega=0.25, mu=1.5, interpret=True
+    )
+    assert not bool(ok2)
+
+
+def test_fused_compact_select_falls_back_bit_for_bit():
+    """End-to-end routing through compact_select(fastpath="on") when the
+    certificate fails: the lax.cond fallback must still produce exactly
+    the dense path's payload."""
+    from repro.core import compact as C
+    from repro.core.sparsify import SparsifierConfig
+
+    L, k = 65_536, 20
+    cfg = SparsifierConfig(kind="topk", sparsity=k / L)
+    st = C.compact_init(L, k)
+    g = (
+        jnp.zeros(L)
+        .at[jnp.arange(40)]
+        .set(jnp.arange(40, 0, -1).astype(jnp.float32))
+    )
+    a1, v1, i1 = C.compact_select(cfg, st, g, k)
+    a2, v2, i2 = C.compact_select(cfg, st, g, k, fastpath="on")
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_fused_fastpath_y_tie_collapse_regression():
+    """Regression: ``x^y`` preserves order but not *ties* — with y=0.5,
+    two magnitudes one ulp apart both sqrt to the same f32, and the fused
+    kernel (which used to apply ``|a|^y`` where the dense path scores
+    plain ``|a|``: all of topk, regtopk's round 0) silently selected a
+    different, certificate-blessed payload order. topk must score with
+    y forced to 1; regtopk with y != 1 must take the dense fallback on
+    round 0."""
+    from repro.core import compact as C
+    from repro.core.sparsify import SparsifierConfig
+
+    L, k = 8192, 2
+    g = jnp.zeros(L).at[jnp.array([50, 100])].set(
+        jnp.array([1.0, 1.0000001])
+    )
+    assert float(jnp.sqrt(g[50])) == float(jnp.sqrt(g[100]))  # f32 tie
+    for kind in ("topk", "regtopk"):
+        cfg = SparsifierConfig(kind=kind, sparsity=k / L, y=0.5, mu=1.0)
+        st = C.compact_init(L, k)
+        a1, v1, i1 = C.compact_select(cfg, st, g, k)
+        a2, v2, i2 = C.compact_select(cfg, st, g, k, fastpath="on")
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2), kind)
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2), kind)
+        # regtopk round 1 (t > 0): both paths apply ^y — fused may engage
+        agg = 0.5 * jnp.zeros(L).at[i1].add(v1)
+        st1 = C.compact_finalize(st, a1, v1, i1, agg)
+        b1, w1, j1 = C.compact_select(cfg, st1, g, k)
+        b2, w2, j2 = C.compact_select(cfg, st1, g, k, fastpath="on")
+        np.testing.assert_array_equal(np.asarray(j1), np.asarray(j2), kind)
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2), kind)
+    # an unsaturated regularizer (tanh < 1 scales every unsent score and
+    # can also collapse ties) is not fusable for either kind
+    from repro.comm import fastpath as fp
+
+    assert not fp.config_fusable(
+        SparsifierConfig(kind="topk", sparsity=0.01, mu=1e9)
+    )[0]
+    # bf16 compact state never routes fused (scores would move to f32)
+    cfg = SparsifierConfig(kind="topk", sparsity=k / L)
+    st16 = C.compact_init(L, k, jnp.bfloat16)
+    a1, v1, i1 = C.compact_select(cfg, st16, g.astype(jnp.bfloat16), k)
+    a2, v2, i2 = C.compact_select(
+        cfg, st16, g.astype(jnp.bfloat16), k, fastpath="on"
+    )
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
 def test_hierarchical_topk_exact_when_k_small():
     score = jnp.abs(_rand(jax.random.PRNGKey(6), (32, 1024)))
     k = 4

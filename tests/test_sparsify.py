@@ -223,7 +223,6 @@ def test_sparsity_to_k_shifts_leaf_plan_and_wire_bytes():
     phantom coordinate per leaf per gather hop."""
     from jax.sharding import PartitionSpec as P
 
-    from repro import comm
     from repro.core.distributed import (
         DistConfig,
         build_plan,
@@ -463,6 +462,43 @@ def test_simulator_sparse_aggregation_matches_dense():
     np.testing.assert_allclose(
         out["dense_allreduce"], out["sparse_allgather"], rtol=1e-5
     )
+
+
+def test_training_equivalence_dense_vs_fused_fastpath():
+    """ISSUE 5: a full training run with the fused Pallas fastpath must
+    track the dense path exactly. The simulator fuses the scoring stage
+    (SparsifierConfig.score_fn → the regtopk score kernel, interpret mode
+    on CPU); the score kernel replays the same f32 op chain, so the
+    trajectories match to float tolerance — and selection (discrete)
+    never diverges."""
+    from repro.data.pipeline import linreg_grad_fn, make_linreg
+
+    data = make_linreg(3, 4, 64, 100)
+    grad_fn = linreg_grad_fn(data)
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.1, mu=1.0)
+    out = {}
+    for fp in ("off", "on"):
+        sim = DistributedSim(
+            grad_fn, 4, 64, cfg, learning_rate=1e-2, fastpath=fp
+        )
+        assert (sim.sparsifier.cfg.score_fn is not None) == (fp == "on")
+        fin, _ = sim.run(jnp.zeros(64), 40)
+        out[fp] = np.asarray(fin.theta)
+    np.testing.assert_allclose(out["off"], out["on"], rtol=1e-6, atol=1e-7)
+
+
+def test_sim_fastpath_auto_declines_off_tpu():
+    """'auto' must resolve to the unfused path off-TPU (interpret-mode
+    Pallas never beats XLA), leaving score_fn unset; unknown modes raise."""
+    from repro.data.pipeline import linreg_grad_fn, make_linreg
+
+    grad_fn = linreg_grad_fn(make_linreg(3, 2, 16, 50))
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.25)
+    sim = DistributedSim(grad_fn, 2, 16, cfg, fastpath="auto")
+    if jax.default_backend() != "tpu":
+        assert sim.sparsifier.cfg.score_fn is None
+    with pytest.raises(ValueError, match="fastpath"):
+        DistributedSim(grad_fn, 2, 16, cfg, fastpath="bogus")
 
 
 def test_dgc_momentum_correction():

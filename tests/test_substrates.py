@@ -1,5 +1,4 @@
 """Unit tests for optimizer / data / checkpoint / sharding substrates."""
-import os
 import tempfile
 
 import jax

@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""CI perf-regression gate over the ``BENCH_*.json`` artifacts.
+
+Compares a freshly produced bench JSON (``benchmarks/*_bench.py --json``)
+against the committed baseline in `benchmarks/baselines/` and fails when
+any row's interpret-mode ``us_per_call`` regresses beyond ``--max-ratio``
+(default 1.5x, the ISSUE 5 gate).
+
+Raw microseconds are not comparable across machines, so both sides are
+first normalized by their run's ``meta.calib_us`` — a fixed XLA reference
+computation timed in the same process (``benchmarks/common.py``) — and
+the gate compares *relative* slowdowns:
+
+    ratio = (cur.us / cur.calib_us) / (base.us / base.calib_us)
+
+Two noise guards keep the 1.5x threshold meaningful on CPU runners:
+
+* rows whose baseline time is ~0 (pure accounting rows) are skipped, and
+* a regression must also exceed ``--slack-us`` (default 15 ms,
+  *baseline-machine* microseconds: the current timing is converted into
+  baseline units via the calibration ratio before the subtraction, so a
+  faster runner doesn't shrink real regressions under the floor). CPU
+  jit rows in the single-digit-ms range jitter several-x run-to-run
+  even on an idle machine, so below the floor the gate only checks
+  presence and sanity; its teeth are the interpret-mode kernel rows
+  (tens to hundreds of ms), where a real 1.5x moves far more than the
+  floor.
+
+Rows present only in the current run are informational (new kernels have
+no baseline yet — refresh with `tools/update_baselines.py`); rows that
+*disappeared* from the current run fail, so a silently dropped benchmark
+cannot masquerade as a perf win.
+
+Usage: python tools/check_perf.py CURRENT.json BASELINE.json
+       [--max-ratio R] [--slack-us US]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MIN_BASELINE_US = 1.0  # below this a row is accounting, not timing
+
+
+def load(path: str):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    calib = float(doc["meta"]["calib_us"])
+    if calib <= 0:
+        raise SystemExit(f"{path}: non-positive calib_us {calib}")
+    rows = {r["name"]: float(r["us_per_call"]) for r in doc["rows"]}
+    return rows, calib, doc["meta"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail when normalized us_per_call exceeds "
+                         "baseline by this factor (default 1.5)")
+    ap.add_argument("--slack-us", type=float, default=15000.0,
+                    help="absolute regression floor in baseline-machine "
+                         "microseconds: rows slower by less than this "
+                         "(after calibration conversion) never fail — "
+                         "sub-5ms CPU rows jitter past any ratio")
+    args = ap.parse_args(argv)
+
+    cur, cur_calib, cur_meta = load(args.current)
+    base, base_calib, base_meta = load(args.baseline)
+    print(
+        f"check_perf: {args.current} (calib {cur_calib:.0f}us, "
+        f"jax {cur_meta.get('jax')}) vs {args.baseline} "
+        f"(calib {base_calib:.0f}us, jax {base_meta.get('jax')})"
+    )
+
+    failures = []
+    for name, base_us in sorted(base.items()):
+        if name not in cur:
+            failures.append(f"{name}: present in baseline, missing from run")
+            continue
+        if base_us < MIN_BASELINE_US:
+            continue
+        ratio = (cur[name] / cur_calib) / (base_us / base_calib)
+        # current timing expressed in baseline-machine microseconds, so
+        # the slack floor means the same thing on any runner speed
+        cur_in_base = cur[name] * base_calib / cur_calib
+        slow = ratio > args.max_ratio and (
+            cur_in_base - base_us > args.slack_us
+        )
+        status = "FAIL" if slow else "ok"
+        print(
+            f"  {status:4s} {name}: {cur[name]:.0f}us vs {base_us:.0f}us "
+            f"baseline (normalized ratio {ratio:.2f}x)"
+        )
+        if slow:
+            failures.append(
+                f"{name}: normalized {ratio:.2f}x > {args.max_ratio}x "
+                f"(+{cur_in_base - base_us:.0f}us normalized)"
+            )
+    for name in sorted(set(cur) - set(base)):
+        print(f"  new  {name}: {cur[name]:.0f}us (no baseline — refresh "
+              "with tools/update_baselines.py)")
+
+    if failures:
+        print(f"check_perf: {len(failures)} regression(s)", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("check_perf: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""Refresh the committed perf baselines in `benchmarks/baselines/`.
+
+Runs the JSON-emitting benches (`benchmarks/kernel_bench.py`,
+`benchmarks/comm_bench.py`) in-process and rewrites
+``benchmarks/baselines/BENCH_kernels.json`` /
+``benchmarks/baselines/BENCH_comm.json`` — the files the CI ``perf`` job
+gates new runs against via `tools/check_perf.py`. Timings are stored
+alongside the run's calibration constant, so baselines recorded on one
+machine remain comparable (ratio-of-ratios) on another.
+
+Run from the repo root after a deliberate perf-relevant change, and
+commit the result:
+
+    PYTHONPATH=src:. python tools/update_baselines.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [os.path.join(REPO_ROOT, "src"), REPO_ROOT]
+
+BENCHES = {
+    "kernel_bench": "BENCH_kernels.json",
+    "comm_bench": "BENCH_comm.json",
+}
+
+
+def main() -> int:
+    import importlib
+
+    from benchmarks.common import write_json
+
+    out_dir = os.path.join(REPO_ROOT, "benchmarks", "baselines")
+    os.makedirs(out_dir, exist_ok=True)
+    for mod_name, fname in BENCHES.items():
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        rows = mod.run()
+        write_json(os.path.join(out_dir, fname), mod_name, rows)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
