@@ -13,8 +13,7 @@ from __future__ import annotations
 
 from benchmarks.common import row
 from benchmarks.roofline import count_params
-from repro import comm
-from repro import configs as cfglib
+from repro import comm, configs as cfglib
 
 N_WORKERS = 16
 

@@ -34,12 +34,6 @@ All gradient aggregation in :mod:`repro.core.distributed` and
 """
 from repro.comm import autotune, calibrate, fastpath
 from repro.comm.autotune import CommPlan, LeafDecision, choose_leaf, plan_tree
-from repro.comm.fastpath import (
-    FASTPATH_MODES,
-    ThroughputTable,
-    fusable,
-    fused_compact_select,
-)
 from repro.comm.calibrate import (
     Calibration,
     Sample,
@@ -66,13 +60,6 @@ from repro.comm.collectives import (
     SparseAllgather,
     get_collective,
 )
-from repro.comm.participation import (
-    PARTICIPATION_KINDS,
-    Participation,
-    parse_participation,
-    renormalize_weights,
-    worker_index,
-)
 from repro.comm.cost import (
     AlphaBeta,
     CostEstimate,
@@ -86,6 +73,19 @@ from repro.comm.cost import (
     predict,
     predicted_bytes,
     wire_words_per_worker,
+)
+from repro.comm.fastpath import (
+    FASTPATH_MODES,
+    ThroughputTable,
+    fusable,
+    fused_compact_select,
+)
+from repro.comm.participation import (
+    PARTICIPATION_KINDS,
+    Participation,
+    parse_participation,
+    renormalize_weights,
+    worker_index,
 )
 
 __all__ = [

@@ -44,8 +44,7 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 
-from repro.comm import cost as cost_lib
-from repro.comm import fastpath as fastpath_lib
+from repro.comm import cost as cost_lib, fastpath as fastpath_lib
 from repro.comm.codec import CODECS, get_codec
 from repro.comm.collectives import COLLECTIVES, get_collective
 from repro.comm.cost import (

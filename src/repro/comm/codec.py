@@ -181,6 +181,7 @@ class BitmapDense(Codec):
 
     name = "bitmap_dense"
     lossless = True
+    supports_fused = False  # wire format is inherently dense (RPL105)
 
     def encode(self, vals, idx, length):
         k = vals.shape[0]

@@ -413,7 +413,7 @@ def predict(
     else:
         seconds = sum(
             g * l.alpha + b * l.beta
-            for (b, g), l in zip(per_axis, topo.links)
+            for (b, g), l in zip(per_axis, topo.links, strict=True)
         )
     return CostEstimate(
         bytes_on_wire=math.ceil(by),

@@ -253,7 +253,7 @@ def worker_index(
     >>> wid = worker_index(("pod", "data"), (2, 4))  # doctest: +SKIP
     """
     wid = jnp.zeros((), jnp.int32)
-    for ax, size in zip(dp_axes, dp_sizes):
+    for ax, size in zip(dp_axes, dp_sizes, strict=True):
         wid = wid * int(size) + jax.lax.axis_index(ax)
     return wid
 

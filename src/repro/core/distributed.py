@@ -215,8 +215,7 @@ def build_plan(params_shape, specs, mesh, sparsity: float,
     is the fusability matrix (+ throughput table for mode "auto") applied
     to the global (codec, collective).
     """
-    from repro.comm import autotune
-    from repro.comm import fastpath as fp_lib
+    from repro.comm import autotune, fastpath as fp_lib
 
     auto = dist is not None and (
         dist.codec == "auto" or (dist.collective or "") == "auto"
@@ -458,7 +457,7 @@ def make_sparsify_aggregate(
     # fusable end to end (a stale plan flag on a non-fusable wire would
     # call a missing encode_fused deep inside shard_map — fail fast here).
     fused_flags = [leaf_fastpath(p, dist) for p in plan_flat]
-    for p, (cname, sname), fval in zip(plan_flat, wires, fused_flags):
+    for p, (cname, sname), fval in zip(plan_flat, wires, fused_flags, strict=True):
         if not fval:
             continue
         ok, why = comm.fusable(
@@ -485,7 +484,7 @@ def make_sparsify_aggregate(
         outs = [
             _spa_leaf(g, s, p, scfg, codec, sname, dp, part_ctx, fval)
             for g, s, p, codec, (_, sname), fval in zip(
-                g_flat, s_flat, plan_flat, leaf_codecs, wires, fused_flags
+                g_flat, s_flat, plan_flat, leaf_codecs, wires, fused_flags, strict=True
             )
         ]
         agg = jax.tree.unflatten(plan_def, [o[0] for o in outs])

@@ -21,8 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import comm
-from repro.core import aggregate
-from repro.core import selectors as sel_lib
+from repro.core import aggregate, selectors as sel_lib
 from repro.core.sparsify import (
     Sparsifier,
     SparsifierConfig,

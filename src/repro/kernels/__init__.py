@@ -10,7 +10,7 @@
 ``ops`` holds the jit'd public wrappers (auto interpret-mode off-TPU);
 ``ref`` the pure-jnp oracles every kernel is allclose-tested against.
 """
-from repro.kernels import (  # noqa: F401
+from repro.kernels import (
     block_topk,
     fused_encode,
     ops,

@@ -12,10 +12,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import block_topk as _bt
-from repro.kernels import fused_encode as _fe
-from repro.kernels import regtopk_score as _rs
-from repro.kernels import threshold_topk as _tt
+from repro.kernels import (
+    block_topk as _bt,
+    fused_encode as _fe,
+    regtopk_score as _rs,
+    threshold_topk as _tt,
+)
 
 LANES = _rs.LANES
 SUBLANES = _rs.SUBLANES

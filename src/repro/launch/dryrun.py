@@ -118,7 +118,7 @@ def zero1_specs(params_shape, param_specs, mesh, dp_axes):
         if any(a in taken for a in dp):
             return spec
         entries = list(spec) + [None] * (len(dims) - len(spec))
-        for i, (d, e) in enumerate(zip(dims, entries)):
+        for i, (d, e) in enumerate(zip(dims, entries, strict=True)):
             if e is None and d % dp_size == 0 and d >= dp_size:
                 entries[i] = dp_entry
                 return P(*entries)

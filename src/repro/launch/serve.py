@@ -47,14 +47,14 @@ def main():
     tokens = jax.random.randint(key, (args.batch, 1), 0, cfg.vocab)
 
     # prefill via decode steps (teacher forcing the prompt)
-    for t in range(args.prompt_len):
+    for _t in range(args.prompt_len):
         logits, cache = step(params, cache, tokens)
         tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     jax.block_until_ready(tokens)
 
     t0 = time.time()
     out = []
-    for t in range(args.new_tokens):
+    for _t in range(args.new_tokens):
         logits, cache = step(params, cache, tokens)
         tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out.append(tokens)

@@ -107,7 +107,7 @@ def main():
         from repro import comm
 
         link_topo = comm.parse_link_topo(args.link_topo, dp_axes)
-        for ax, lk in zip(dp_axes, link_topo.links):
+        for ax, lk in zip(dp_axes, link_topo.links, strict=True):
             print(
                 f"link-topo {ax}: alpha={lk.alpha:.3e} s/msg "
                 f"beta={lk.beta:.3e} s/B",
@@ -122,7 +122,7 @@ def main():
             res = cal.calibrate_topo(mesh=mesh, dp_axes=dp_axes)
             if res.calibrated:
                 link_topo = res.topo
-                for ax, c in zip(res.axes, res.per_axis):
+                for ax, c in zip(res.axes, res.per_axis, strict=True):
                     print(
                         f"calibrated {ax}: alpha={c.model.alpha:.3e} s/msg "
                         f"beta={c.model.beta:.3e} s/B "

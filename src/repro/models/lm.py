@@ -17,8 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.nn import layers as L
-from repro.nn import moe as M
+from repro.nn import layers as L, moe as M
 
 Params = Dict[str, Any]
 

@@ -16,8 +16,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models.lm import mask_pad_logits
-from repro.nn import layers as L
-from repro.nn import ssd
+from repro.nn import layers as L, ssd
 
 Params = Dict[str, Any]
 

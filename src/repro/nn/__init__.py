@@ -5,4 +5,4 @@ matching tree of *logical axis* tuples (strings) that
 :mod:`repro.nn.sharding` resolves to mesh ``PartitionSpec`` s. No framework
 dependency — pure JAX, scan-stacked layers.
 """
-from repro.nn import layers, moe, sharding, ssd  # noqa: F401
+from repro.nn import layers, moe, sharding, ssd

@@ -103,7 +103,7 @@ except ModuleNotFoundError:
                 while ran < n:
                     drawn = {
                         nm: s.draw(rng)
-                        for nm, s in zip(strat_names, strategies)
+                        for nm, s in zip(strat_names, strategies, strict=True)
                     }
                     kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
                     fn(**fixture_kwargs, **drawn, **kw)

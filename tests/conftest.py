@@ -3,6 +3,10 @@ jax device state here — the dry-run owns XLA_FLAGS, per DESIGN.md)."""
 import os
 import sys
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(ROOT, "src")
 if SRC not in sys.path:
     sys.path.insert(0, os.path.abspath(SRC))
+# repo root too, so the reprolint test modules can import ``tools.reprolint``
+if ROOT not in sys.path:
+    sys.path.insert(1, ROOT)

@@ -4,14 +4,15 @@ Planner unit behaviour (admissibility, determinism, optimality), the
 DistConfig/DistributedSim "auto" threading, and the calibrate fit.
 """
 import dataclasses
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 from jax.sharding import PartitionSpec as P
 
+from _hyp import given, settings, st
 from repro import comm
 from repro.comm.autotune import candidate_pairs, choose_leaf, plan_tree
 from repro.comm.calibrate import Sample, fit_alpha_beta
@@ -168,7 +169,7 @@ def test_plan_tree_heterogeneous_picks_and_totals():
 # DistConfig / build_plan threading
 # ---------------------------------------------------------------------------
 class _Mesh:
-    shape = {"data": 8}
+    shape: ClassVar[dict] = {"data": 8}
 
 
 def _shapes(tree):
@@ -424,7 +425,7 @@ def test_parse_link_topo_specs():
 
 def test_distconfig_link_topo_threads_into_build_plan():
     class _Mesh2:
-        shape = {"pod": 2, "data": 4}
+        shape: ClassVar[dict] = {"pod": 2, "data": 4}
 
     shapes = _shapes({"big": 1_000_000, "bias": 64})
     specs = {"big": P(None), "bias": P(None)}
@@ -635,7 +636,7 @@ def test_build_plan_fills_fused_flags_per_leaf():
     overhead), and fastpath='off' leaves the field None."""
 
     class _Mesh:
-        shape = {"data": 8}
+        shape: ClassVar[dict] = {"data": 8}
 
     shapes = {
         "emb": jax.ShapeDtypeStruct((65_536,), jnp.float32),

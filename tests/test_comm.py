@@ -7,13 +7,14 @@ equivalence against ``dense_allreduce`` in both the simulator and the
 """
 import dataclasses
 import textwrap
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 
+from _hyp import given, settings, st
 from repro import comm
 from repro.core import DistributedSim, SparsifierConfig, make_sparsifier
 from repro.core.selectors import sparsity_to_k
@@ -299,15 +300,16 @@ def test_none_sparsifier_payload_collective_stays_dense():
 def test_dense_wire_bytes_track_state_dtype():
     """bf16 eps state psums a bf16 vector — comm_bytes must halve, not
     assume 4-byte words (regression)."""
+    from jax.sharding import PartitionSpec as P
+
     from repro.core.distributed import (
         DistConfig,
         LeafPlan,
         comm_round_bytes,
     )
-    from jax.sharding import PartitionSpec as P
 
     class _Mesh:
-        shape = {"data": 4}
+        shape: ClassVar[dict] = {"data": 4}
 
     plan = LeafPlan((64,), (64,), 64, 4, P(None))
     f32 = DistConfig(aggregation="dense_allreduce", state_dtype="float32")

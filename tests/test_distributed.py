@@ -50,7 +50,7 @@ def test_compact_matches_dense_state(kind, y):
     st = compact_init(L, k)
     key = jax.random.PRNGKey(0)
     g_prev_dense = jnp.zeros(L)
-    for t in range(steps):
+    for _t in range(steps):
         key, sk = jax.random.split(key)
         g = jax.random.normal(sk, (L,))
         # dense reference on the reconstructed state
@@ -158,7 +158,7 @@ def test_compact_cyclic_covers_all_coordinates():
 
     st = compact_init(L, k)
     seen = set()
-    for t in range(-(-L // k) + 1):
+    for _t in range(-(-L // k) + 1):
         g = jnp.ones(L)
         a, vals, idx = compact_select(cfg, st, g, k)
         seen.update(np.asarray(idx).tolist())
@@ -257,7 +257,7 @@ def test_compact_select_fastpath_multi_round_parity():
 
     st = compact_init(L, k)
     key = jax.random.PRNGKey(3)
-    for t in range(4):
+    for _t in range(4):
         key, sk = jax.random.split(key)
         g = jax.random.normal(sk, (L,))
         a1, v1, i1 = compact_select(cfg, st, g, k)
@@ -403,12 +403,68 @@ def test_train_cli_checkpoint_resume(tmp_path):
     base = [sys.executable, "-m", "repro.launch.train",
             "--arch", "paper-resnet-proxy", "--smoke", "--steps", "4",
             "--global-batch", "2", "--seq", "16", "--log-every", "2"]
-    r1 = subprocess.run(base + ["--checkpoint", ckpt],
+    r1 = subprocess.run([*base, "--checkpoint", ckpt],
                         capture_output=True, text=True, env=env, timeout=480)
     assert r1.returncode == 0, r1.stderr[-2000:]
     assert "checkpointed" in r1.stdout
-    r2 = subprocess.run(base + ["--resume", ckpt],
+    r2 = subprocess.run([*base, "--resume", ckpt],
                         capture_output=True, text=True, env=env, timeout=480)
     assert r2.returncode == 0, r2.stderr[-2000:]
     assert "resumed from step 4" in r2.stdout
     assert "step     7" in r2.stdout or "step 7" in r2.stdout.replace("  ", " ")
+
+
+def test_spa_participation_round_loop_compiles_once_multidevice():
+    """Retrace guard (ISSUE 7): the shard_map aggregation under a
+    round_robin participation schedule on a real 4-worker mesh compiles
+    exactly once across rounds — the rotating drop set is a function of
+    the *traced* round counter, never a fresh compilation."""
+    code = textwrap.dedent("""
+        import json
+
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro.comm import Participation
+        from repro.compat import make_mesh
+        from repro.core.distributed import (
+            DistConfig,
+            LeafPlan,
+            init_sparsifier_state,
+            make_sparsify_aggregate,
+        )
+        from repro.core.sparsify import SparsifierConfig
+
+        mesh = make_mesh((4, 1), ("data", "model"))
+        dist = DistConfig(
+            sparsifier=SparsifierConfig(kind="regtopk", sparsity=8 / 256),
+            codec="coo_fp32",
+            collective="sparse_allgather",
+            dp_axes=("data",),
+            participation=Participation("round_robin", n_stragglers=1),
+        )
+        plan = {"w": LeafPlan((256,), (256,), 256, 8, P(None), fused=False)}
+        state, specs = init_sparsifier_state(
+            plan, 4, mesh, ("data",), jnp.float32
+        )
+        spa = make_sparsify_aggregate(mesh, plan, {"w": P(None)}, specs,
+                                      dist, 4)
+        calls = {"n": 0}
+
+        def counted(g, s):
+            calls["n"] += 1
+            return spa(g, s)
+
+        step = jax.jit(counted)
+        grads = {"w": jnp.linspace(-1.0, 1.0, 4 * 256).reshape(4, 256)}
+        with mesh:
+            for _ in range(5):
+                agg, state = step(grads, state)
+        jax.block_until_ready(agg)
+        print(json.dumps({"traces": calls["n"],
+                          "t": int(state["w"].t[0])}))
+    """)
+    res = run_sub(code, devices=4)
+    assert res["traces"] == 1, res
+    assert res["t"] == 5

@@ -16,7 +16,7 @@ import pytest
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(REPO, "tools"))
 
-import check_docs  # noqa: E402  (tools/check_docs.py)
+import check_docs  # the module under test: tools/check_docs.py
 
 
 def test_docs_pages_exist():
@@ -76,3 +76,32 @@ def test_public_comm_functions_have_doctests(modname):
     assert not missing, (
         f"{modname}: public functions without doctest examples: {missing}"
     )
+
+
+def test_symbol_level_dotted_references(tmp_path):
+    """ISSUE 7 satellite: dotted repro.* spans resolve via importlib —
+    and drifted ones fail."""
+    good = tmp_path / "good.md"
+    good.write_text(
+        "Use `repro.comm.cost.predict` with `repro.comm.Participation`;\n"
+        "`repro.comm.autotune.choose_leaf(fastpath=...)` plans leaves.\n"
+    )
+    assert check_docs.check_file(str(good)) == []
+
+    drifted = tmp_path / "drifted.md"
+    drifted.write_text(
+        "Call `repro.comm.cost.predict_bytes` (renamed long ago) and\n"
+        "see `repro.core.not_a_module` for details.\n"
+    )
+    errors = check_docs.check_file(str(drifted))
+    assert len(errors) == 2
+    assert all("does not resolve" in e for e in errors)
+
+
+def test_dotted_check_skips_paths_and_fences(tmp_path):
+    md = tmp_path / "mixed.md"
+    md.write_text(
+        "The file `src/repro/comm/cost.py` is a path, not a symbol.\n"
+        "```python\nimport repro.bogus.example  # illustrative only\n```\n"
+    )
+    assert check_docs.check_file(str(md)) == []

@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 
+from _hyp import given, settings, st
 from repro.kernels import ops, ref
 from repro.kernels.block_topk import block_topk_candidates
 from repro.kernels.regtopk_score import regtopk_score as raw_score

@@ -1,0 +1,120 @@
+"""CLI-level reprolint tests: exit codes, output format, suppressions,
+and the acceptance-criterion demonstration that a seeded violation fails
+the same invocation the CI `static` job runs.
+"""
+import os
+import re
+import subprocess
+import sys
+import textwrap
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", *args],
+        cwd=REPO_ROOT,
+        capture_output=True,
+        text=True,
+    )
+
+
+def write(tmp_path, name, source):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    return str(f)
+
+
+SEEDED = """
+    import jax
+
+    @jax.jit
+    def f(x: jax.Array):
+        if x > 0:
+            return x
+        return -x
+"""
+
+
+def test_clean_file_exits_zero(tmp_path):
+    path = write(
+        tmp_path,
+        "clean.py",
+        """
+        import jax.numpy as jnp
+
+        def f(x):
+            return jnp.where(x > 0, x, 0.0)
+        """,
+    )
+    proc = run_cli(path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_seeded_violation_fails_the_static_invocation(tmp_path):
+    # acceptance criterion: the exact CI invocation demonstrably fails
+    # on a seeded violation.
+    path = write(tmp_path, "seeded.py", SEEDED)
+    proc = run_cli(path)
+    assert proc.returncode == 1
+    line = proc.stdout.splitlines()[0]
+    assert re.match(r".*seeded\.py:\d+:\d+: RPL101 ", line), line
+
+
+def test_suppression_silences_and_unused_suppression_fails(tmp_path):
+    suppressed = write(
+        tmp_path,
+        "suppressed.py",
+        """
+        import jax
+
+        @jax.jit
+        def f(x: jax.Array):
+            if x > 0:  # reprolint: disable=RPL101
+                return x
+            return -x
+        """,
+    )
+    proc = run_cli(suppressed)
+    assert proc.returncode == 0, proc.stdout
+
+    unused = write(
+        tmp_path,
+        "unused.py",
+        """
+        def g(x):  # reprolint: disable=RPL101
+            return x
+        """,
+    )
+    proc = run_cli(unused)
+    assert proc.returncode == 1
+    assert "RPL100" in proc.stdout and "unused suppression" in proc.stdout
+
+
+def test_suppression_inside_string_literal_is_inert(tmp_path):
+    path = write(
+        tmp_path,
+        "stringy.py",
+        '''
+        EXAMPLE = """
+        x = 1  # reprolint: disable=RPL101
+        """
+        ''',
+    )
+    proc = run_cli(path)
+    assert proc.returncode == 0, proc.stdout
+
+
+def test_list_rules_covers_all_ids():
+    proc = run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rule in ("RPL100", "RPL101", "RPL102", "RPL103", "RPL104", "RPL105"):
+        assert rule in proc.stdout
+
+
+def test_repo_tree_is_clean():
+    # the tree this PR ships must satisfy its own linter (dogfood).
+    proc = run_cli("src", "tests", "benchmarks")
+    assert proc.returncode == 0, proc.stdout + proc.stderr

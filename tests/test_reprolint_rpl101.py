@@ -1,0 +1,115 @@
+"""RPL101 fixtures: tracer-unsafe Python control flow in traced functions.
+
+True positives must flag; the clean fixtures encode the idioms the repo
+actually relies on (config branching inside shard_map bodies, shape/dtype
+branches, `is None` plumbing) and must stay silent.
+"""
+import textwrap
+
+from tools.reprolint import lint_paths
+
+
+def _lint(tmp_path, source, select=("RPL101",)):
+    f = tmp_path / "fixture.py"
+    f.write_text(textwrap.dedent(source))
+    viols, n_files = lint_paths(
+        [str(f)], select=list(select), repo_root=str(tmp_path)
+    )
+    assert n_files == 1
+    return viols
+
+
+def test_branch_on_array_param_flags(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import jax
+
+        @jax.jit
+        def f(x: jax.Array):
+            if x > 0:
+                return x
+            return -x
+        """,
+    )
+    assert [v.rule for v in viols] == ["RPL101"]
+    assert "if" in viols[0].message and "'f'" in viols[0].message
+
+
+def test_while_and_assert_in_shard_map_body_flag(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import jax
+        from jax.experimental.shard_map import shard_map
+
+        def build(mesh, specs):
+            def body(g: jax.Array):
+                assert g.sum() > 0
+                while g.mean() > 1:
+                    g = g * 0.5
+                return g
+            return shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs)
+        """,
+    )
+    assert sorted({v.rule for v in viols}) == ["RPL101"]
+    assert len(viols) == 2  # the assert and the while
+
+
+def test_taint_through_array_annotated_state_field_flags(tmp_path):
+    # the repo-aware pre-pass: ``st.t`` taints because SomeState.t is
+    # annotated jax.Array, even though ``st`` itself is untyped.
+    viols = _lint(
+        tmp_path,
+        """
+        import jax
+        from typing import NamedTuple
+
+        class SomeState(NamedTuple):
+            t: jax.Array
+
+        @jax.jit
+        def step(st):
+            if st.t > 0:
+                return st
+            return st
+        """,
+    )
+    assert [v.rule for v in viols] == ["RPL101"]
+
+
+def test_config_and_shape_branches_stay_clean(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x: jax.Array, cfg=None):
+            if x.ndim == 2:                      # static: shape attr
+                x = x.reshape(-1)
+            if cfg is not None and cfg.kind == "regtopk":  # config dispatch
+                x = x * 2.0
+            k = max(1, int(0.01 * x.shape[0]))   # concretizing builtins
+            if k > x.shape[0]:
+                k = x.shape[0]
+            return jnp.where(x > 0, x, 0.0)      # value branch done right
+        """,
+    )
+    assert viols == []
+
+
+def test_untraced_function_branches_stay_clean(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import numpy as np
+
+        def host_side(x):
+            if np.asarray(x).sum() > 0:
+                return x
+            return -x
+        """,
+    )
+    assert viols == []

@@ -1,0 +1,128 @@
+"""RPL103 fixtures: Pallas kernel constraints (tiling, f64, tracer
+ranges, program_id vs grid rank)."""
+import textwrap
+
+from tools.reprolint import lint_paths
+
+
+def _lint(tmp_path, source):
+    f = tmp_path / "fixture.py"
+    f.write_text(textwrap.dedent(source))
+    viols, n_files = lint_paths(
+        [str(f)], select=["RPL103"], repo_root=str(tmp_path)
+    )
+    assert n_files == 1
+    return viols
+
+
+def test_bad_tile_f64_and_program_id_flag(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        SUBLANES = 8
+        BAD = (SUBLANES, 100)          # lane dim not %128
+
+        def _kernel(x_ref, o_ref):
+            i = pl.program_id(1)       # grid rank is 1
+            o_ref[...] = x_ref[...].astype(jnp.float64)  # f64
+
+        def run(x):
+            spec = pl.BlockSpec(BAD, lambda i: (i, 0))
+            return pl.pallas_call(
+                _kernel,
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                grid=(x.shape[0] // SUBLANES,),
+                in_specs=[spec],
+                out_specs=spec,
+            )(x)
+        """,
+    )
+    msgs = " | ".join(v.message for v in viols)
+    assert all(v.rule == "RPL103" for v in viols)
+    assert "not a multiple of 128" in msgs
+    assert "float64" in msgs
+    assert "program_id(1)" in msgs
+
+
+def test_tracer_range_loop_in_kernel_flags(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            n = x_ref[0, 0].astype(jnp.int32)
+            acc = x_ref[...]
+            for _ in range(n):         # tracer-dependent bound
+                acc = acc * 2
+            o_ref[...] = acc
+
+        def run(x):
+            return pl.pallas_call(
+                _kernel,
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                grid=(1,),
+            )(x)
+        """,
+    )
+    assert [v.rule for v in viols] == ["RPL103"]
+    assert "tracer-dependent range" in viols[0].message
+
+
+def test_repo_idioms_stay_clean(tmp_path):
+    # (8, 1024) tiles via module constants, degenerate (1, m)/(1, 1)
+    # blocks, static keyword-only loop bounds, program_id(0): all legal.
+    viols = _lint(
+        tmp_path,
+        """
+        import functools
+
+        import jax
+        from jax.experimental import pallas as pl
+
+        LANES = 1024
+        SUBLANES = 8
+        BLOCK = (SUBLANES, LANES)
+
+        def _kernel(x_ref, o_ref, *, m):
+            i = pl.program_id(0)
+            acc = x_ref[...]
+            for _ in range(m):         # m is static (partial-bound)
+                acc = acc + 1.0
+            o_ref[...] = acc
+
+        def run(x, m):
+            spec = pl.BlockSpec(BLOCK, lambda i: (i, 0))
+            out = pl.BlockSpec((1, m), lambda i: (i, 0))
+            scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+            return pl.pallas_call(
+                functools.partial(_kernel, m=4),
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                grid=(x.shape[0] // SUBLANES,),
+                in_specs=[spec],
+                out_specs=out,
+            )(x), scalar
+        """,
+    )
+    assert viols == []
+
+
+def test_non_pallas_module_ignored(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import jax.numpy as jnp
+
+        def host(x):
+            return x.astype(jnp.float64)   # fine outside kernel modules
+        """,
+    )
+    assert viols == []

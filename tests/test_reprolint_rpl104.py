@@ -1,0 +1,105 @@
+"""RPL104 fixtures: recompilation hazards."""
+import textwrap
+
+from tools.reprolint import lint_paths
+
+
+def _lint(tmp_path, source):
+    f = tmp_path / "fixture.py"
+    f.write_text(textwrap.dedent(source))
+    viols, n_files = lint_paths(
+        [str(f)], select=["RPL104"], repo_root=str(tmp_path)
+    )
+    assert n_files == 1
+    return viols
+
+
+def test_bad_defaults_on_jitted_fn_flag(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, w=jnp.zeros(3), opts=[1, 2]):
+            return x + w
+        """,
+    )
+    msgs = " | ".join(v.message for v in viols)
+    assert len(viols) == 2
+    assert "array-valued default" in msgs
+    assert "unhashable" in msgs
+
+
+def test_static_argnums_on_array_param_flags(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, static_argnums=(0,))
+        def f(a: jax.Array, k: int):
+            return a * k
+
+        @functools.partial(jax.jit, static_argnames=("b",))
+        def g(x: jax.Array, b: jax.Array):
+            return x + b
+        """,
+    )
+    assert len(viols) == 2
+    assert all("retraces" in v.message for v in viols)
+
+
+def test_tracer_fstring_and_jit_in_loop_flag(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        import jax
+
+        @jax.jit
+        def f(x: jax.Array):
+            tag = f"val={x}"
+            return x, tag
+
+        def sweep(fn, xs):
+            outs = []
+            for x in xs:
+                jf = jax.jit(fn)
+                outs.append(jf(x))
+            return outs
+        """,
+    )
+    msgs = " | ".join(v.message for v in viols)
+    assert len(viols) == 2
+    assert "f-string" in msgs
+    assert "inside a loop" in msgs
+
+
+def test_static_idioms_stay_clean(tmp_path):
+    # literal defaults, static_argnames on genuinely static params, and
+    # per-iteration jit of a *lambda* (deliberate rebind) are all fine.
+    viols = _lint(
+        tmp_path,
+        """
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("k", "interpret"))
+        def f(x: jax.Array, k: int = 8, interpret: bool = False):
+            return x[:k]
+
+        def sweep(sims, s):
+            outs = []
+            for sim in sims:
+                step = jax.jit(lambda st: sim.step_fn(st))
+                outs.append(step(s))
+            return outs
+
+        step = jax.jit(f)   # module level: fine
+        """,
+    )
+    assert viols == []

@@ -1,0 +1,99 @@
+"""RPL105 fixtures: codec/collective completeness via import-and-inspect.
+
+The clean fixture is the repo itself — the rule runs against the same
+binary the tests import, so a green run here certifies the live
+registries. The true-positive seeds a deliberately broken subclass and
+checks every facet of the surface contract fires.
+"""
+import gc
+import os
+
+from tools.reprolint.rules import rpl105
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_repo_registries_are_clean():
+    assert rpl105.check_project(REPO_ROOT) == []
+
+
+def test_incomplete_codec_subclass_flags():
+    from repro.comm.codec import Codec
+
+    class HalfCodec(Codec):  # missing decode/wire_bits, unregistered
+        name = "half"
+        supports_fused = True  # ...but no encode_fused
+
+        def encode(self, vals, idx, length):
+            return {"vals": vals}
+
+    try:
+        viols = [
+            v
+            for v in rpl105.check_project(REPO_ROOT)
+            if "HalfCodec" in v.message
+        ]
+        msgs = " | ".join(v.message for v in viols)
+        assert "does not define decode()" in msgs
+        assert "does not define wire_bits()" in msgs
+        assert "supports_fused=True" in msgs  # raising base encode_fused
+        assert "not registered" in msgs
+    finally:
+        del HalfCodec
+        gc.collect()
+    assert rpl105.check_project(REPO_ROOT) == []
+
+
+def test_dead_fused_path_flags():
+    from repro.comm.codec import Codec
+
+    class DeadFused(Codec):  # encode_fused present but supports_fused False
+        name = "dead_fused"
+        supports_fused = False
+
+        def encode(self, vals, idx, length):
+            return {"vals": vals}
+
+        def encode_fused(self, vals, idx, length):
+            return self.encode(vals, idx, length)
+
+        def decode(self, payload, length):
+            return payload["vals"], payload["vals"]
+
+        def wire_bits(self, length, k):
+            return 64 * k
+
+    try:
+        viols = [
+            v
+            for v in rpl105.check_project(REPO_ROOT)
+            if "DeadFused" in v.message
+        ]
+        assert any("dead fused path" in v.message for v in viols)
+    finally:
+        del DeadFused
+        gc.collect()
+
+
+def test_incomplete_collective_subclass_flags():
+    from repro.comm.collectives import Collective
+
+    class HalfCollective(Collective):  # no shard(), unregistered
+        name = "half_coll"
+
+        def reference(self, codec, payloads, weights, length,
+                      participation=None):
+            return None
+
+    try:
+        viols = [
+            v
+            for v in rpl105.check_project(REPO_ROOT)
+            if "HalfCollective" in v.message
+        ]
+        msgs = " | ".join(v.message for v in viols)
+        assert "does not define shard()" in msgs
+        assert "not registered" in msgs
+    finally:
+        del HalfCollective
+        gc.collect()

@@ -1,10 +1,12 @@
 """Unit + property tests for the sparsification core (paper Algorithms 1–2)."""
+from typing import ClassVar
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 
+from _hyp import given, settings, st
 from repro.core import (
     DistributedSim,
     SparsifierConfig,
@@ -230,7 +232,7 @@ def test_sparsity_to_k_shifts_leaf_plan_and_wire_bytes():
     )
 
     class _Mesh:
-        shape = {"data": 4}
+        shape: ClassVar[dict] = {"data": 4}
 
     shapes = {"w": jax.ShapeDtypeStruct((100,), jnp.float32)}
     plan = build_plan(shapes, {"w": P(None)}, _Mesh(), 0.07)

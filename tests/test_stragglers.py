@@ -8,13 +8,14 @@ a subprocess shard_map run checks partial-round dense <-> payload
 equivalence in the real runtime.
 """
 import dataclasses
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 
+from _hyp import given, settings, st
 from repro import comm
 from repro.core import DistributedSim, SparsifierConfig
 
@@ -360,7 +361,7 @@ def test_partial_round_cost_strictly_below_full():
     )
 
     class _Mesh:
-        shape = {"data": 8}
+        shape: ClassVar[dict] = {"data": 8}
 
     plan = LeafPlan((4096,), (4096,), 4096, 64, P(None))
     base = DistConfig(codec="coo_fp32", collective="sparse_allgather")
@@ -435,7 +436,7 @@ def test_runtime_rejects_stale_participation():
     )
 
     class _Mesh:
-        shape = {"data": 4}
+        shape: ClassVar[dict] = {"data": 4}
 
     plan = {"w": LeafPlan((64,), (64,), 64, 4, P(None))}
     dist = DistConfig(
@@ -455,7 +456,7 @@ def test_runtime_rejects_overfull_straggler_count():
     )
 
     class _Mesh:
-        shape = {"data": 4}
+        shape: ClassVar[dict] = {"data": 4}
 
     plan = {"w": LeafPlan((64,), (64,), 64, 4, P(None))}
     dist = DistConfig(

@@ -5,9 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 from jax.sharding import PartitionSpec as P
 
+from _hyp import given, settings, st
 from repro.checkpoint import restore, save
 from repro.data import TokenPipeline
 from repro.data.pipeline import make_linreg
@@ -122,7 +122,7 @@ def test_checkpoint_roundtrip_dtypes():
         from repro.checkpoint.store import metadata
 
         assert metadata(d)["step"] == 42
-    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out), strict=True):
         assert x.dtype == y.dtype
         np.testing.assert_array_equal(np.asarray(x, np.float32),
                                       np.asarray(y, np.float32))

@@ -36,6 +36,7 @@ def test_full_arch_sharding_resolves(arch):
     for leaf, spec, p in zip(
         jax.tree.leaves(shapes), jax.tree.leaves(specs),
         jax.tree.leaves(plan, is_leaf=lambda x: hasattr(x, "local_shape")),
+        strict=True,
     ):
         for dim, entry in enumerate(spec):
             if entry is None:

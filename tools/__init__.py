@@ -1,0 +1,2 @@
+# ``tools`` is a package so the static-analysis pass can run as
+# ``python -m tools.reprolint`` from the repo root (CI `static` job).

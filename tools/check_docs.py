@@ -10,7 +10,11 @@ Validates, over the given markdown files (default: docs/*.md README.md):
 * every backtick code span that looks like a repo file path
   (contains ``/`` and a known source suffix) must exist relative to the
   repo root; a ``path::symbol`` span additionally requires ``def symbol``
-  / ``class symbol`` to be present in that file.
+  / ``class symbol`` to be present in that file;
+* every dotted ``repro.*`` path inside a backtick span must resolve via
+  importlib against the live package (longest importable module prefix,
+  then attribute walk), so the comm/paper_map docs cannot silently drift
+  from the API surface.
 
 Exit status 0 when everything resolves, 1 otherwise (one line per
 problem). Used by tests/test_docs.py and .github/workflows/ci.yml.
@@ -28,6 +32,9 @@ LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
 CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
 HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
 PATH_SUFFIXES = (".py", ".md", ".yml", ".yaml", ".txt", ".toml", ".cfg")
+DOTTED_RE = re.compile(r"\brepro(?:\.\w+)+")
+
+_resolve_cache: dict = {}
 
 
 def strip_code_blocks(text: str) -> str:
@@ -107,6 +114,52 @@ def check_code_span(md_path: str, span: str):
             yield f"{md_path}: {path!r} has no def/class {symbol!r}"
 
 
+def resolve_dotted(dotted: str) -> bool:
+    """True iff a dotted ``repro.*`` path names an importable module or
+    an attribute reachable from one (longest module prefix wins)."""
+    if dotted in _resolve_cache:
+        return _resolve_cache[dotted]
+    import importlib
+
+    src = os.path.join(REPO_ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    parts = dotted.split(".")
+    obj = None
+    split = 0
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+            split = i
+            break
+        except ImportError:
+            continue
+    ok = obj is not None
+    if ok:
+        for attr in parts[split:]:
+            if not hasattr(obj, attr):
+                ok = False
+                break
+            obj = getattr(obj, attr)
+    _resolve_cache[dotted] = ok
+    return ok
+
+
+def check_dotted_spans(md_path: str, span: str):
+    """Yield error strings for dotted ``repro.*`` references in a span.
+    Call syntax is tolerated (``repro.comm.predict(...)`` checks
+    ``repro.comm.predict``); file paths are the path checker's job."""
+    if "/" in span:
+        return
+    for m in DOTTED_RE.finditer(span):
+        dotted = m.group(0)
+        if not resolve_dotted(dotted):
+            yield (
+                f"{md_path}: dotted reference {dotted!r} does not resolve "
+                "via importlib (API drift?)"
+            )
+
+
 def check_file(md_path: str):
     with open(md_path, encoding="utf-8") as f:
         text = strip_code_blocks(f.read())
@@ -115,13 +168,15 @@ def check_file(md_path: str):
         errors.extend(check_link(md_path, m.group(1)))
     for m in CODE_SPAN_RE.finditer(text):
         errors.extend(check_code_span(md_path, m.group(1)))
+        errors.extend(check_dotted_spans(md_path, m.group(1)))
     return errors
 
 
 def main(argv):
-    files = argv or sorted(
-        glob.glob(os.path.join(REPO_ROOT, "docs", "*.md"))
-    ) + [os.path.join(REPO_ROOT, "README.md")]
+    files = argv or [
+        *sorted(glob.glob(os.path.join(REPO_ROOT, "docs", "*.md"))),
+        os.path.join(REPO_ROOT, "README.md"),
+    ]
     errors = []
     for f in files:
         errors.extend(check_file(f))

@@ -1,0 +1,19 @@
+"""reprolint: repo-aware static analysis for JAX/Pallas invariants.
+
+Rules
+-----
+* RPL100 — unused/unknown suppression (meta-rule)
+* RPL101 — tracer-unsafe Python control flow in traced functions
+* RPL102 — shard-axis discipline for ``lax`` collectives
+* RPL103 — Pallas kernel constraints (tiling, f64, tracer ranges, grid)
+* RPL104 — recompilation hazards (defaults, static_argnums, tracer keys)
+* RPL105 — codec/collective registry completeness (import-and-inspect)
+
+Run ``python -m tools.reprolint src tests benchmarks`` from the repo
+root; suppress a single line with ``# reprolint: disable=RPLnnn``.
+See ``docs/static_analysis.md`` for the full rule reference.
+"""
+from tools.reprolint.cli import lint_paths, main
+from tools.reprolint.violations import Violation
+
+__all__ = ["Violation", "lint_paths", "main"]

@@ -1,0 +1,559 @@
+"""Shared AST analysis for reprolint: alias resolution, constant folding,
+traced-function discovery, and the tracer-taint engine.
+
+The rules (``tools/reprolint/rules/``) are thin consumers of this module.
+Everything here is *conservative by construction*: when a value's origin
+cannot be resolved statically the engine degrades to "unknown/static" so
+rules only fire on provable hazards — a repo-wide lint that cries wolf is
+a repo-wide lint that gets disabled.
+
+Key repo-aware ingredient: :func:`collect_array_fields` scans class bodies
+for fields annotated as JAX arrays (``eps: jax.Array`` on ``CompactState``
+and friends), so ``st.t`` taints as a tracer while ``scfg.kind`` — an
+attribute on the *same* untyped parameter — stays static. That distinction
+is what keeps RPL101 useful on idiomatic code that threads config
+dataclasses through ``shard_map`` bodies.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+# taint lattice: STATIC < MAYBE < TRACER
+STATIC, MAYBE, TRACER = 0, 1, 2
+
+JIT_NAMES = {"jit", "pjit"}
+SHARD_NAMES = {"shard_map"}
+PALLAS_NAMES = {"pallas_call"}
+# tracing higher-order functions whose callee argument is traced with
+# abstract values exactly like a jitted function's parameters.
+HOF_NAMES = {
+    "vmap",
+    "grad",
+    "value_and_grad",
+    "scan",
+    "cond",
+    "while_loop",
+    "fori_loop",
+    "checkpoint",
+    "remat",
+}
+
+ARRAY_ANN_RE = re.compile(r"\b(Array|ndarray|ArrayLike)\b")
+
+# attributes of an array that are static python values at trace time
+STATIC_ATTRS = {
+    "shape",
+    "ndim",
+    "dtype",
+    "size",
+    "itemsize",
+    "sharding",
+    "weak_type",
+    "aval",
+}
+
+# methods that return an array when called on an array-ish receiver —
+# these promote a MAYBE receiver to TRACER (``g[0].reshape(...)``)
+ARRAY_METHODS = {
+    "reshape",
+    "astype",
+    "ravel",
+    "flatten",
+    "squeeze",
+    "transpose",
+    "sum",
+    "mean",
+    "max",
+    "min",
+    "prod",
+    "cumsum",
+    "cumprod",
+    "clip",
+    "round",
+    "take",
+    "dot",
+    "argmax",
+    "argmin",
+    "sort",
+    "argsort",
+    "any",
+    "all",
+    "conj",
+    "copy",
+    "add",
+    "set",
+    "multiply",
+    "get",
+}
+
+# builtins that return trace-time-static python values
+CONCRETIZING = {"len", "isinstance", "type", "getattr", "hasattr", "id", "repr"}
+
+JAX_NAMESPACES = ("jax", "jax.numpy", "jax.lax", "jax.nn", "jax.random")
+
+
+def fold(node: ast.AST, env: Dict[str, object]):
+    """Best-effort constant folding: literals, names bound in ``env``,
+    tuples/lists, and int arithmetic. Raises ValueError when unfoldable."""
+    if isinstance(node, ast.Constant):
+        return node.value
+    if isinstance(node, ast.Name):
+        if node.id in env:
+            return env[node.id]
+        raise ValueError(f"unbound name {node.id}")
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(fold(e, env) for e in node.elts)
+    if isinstance(node, ast.BinOp):
+        left, right = fold(node.left, env), fold(node.right, env)
+        ops = {
+            ast.Add: lambda a, b: a + b,
+            ast.Sub: lambda a, b: a - b,
+            ast.Mult: lambda a, b: a * b,
+            ast.FloorDiv: lambda a, b: a // b,
+            ast.Mod: lambda a, b: a % b,
+            ast.Pow: lambda a, b: a**b,
+        }
+        op = ops.get(type(node.op))
+        if op is None:
+            raise ValueError("unfoldable operator")
+        return op(left, right)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return -fold(node.operand, env)
+    raise ValueError(f"unfoldable node {type(node).__name__}")
+
+
+class ModuleInfo:
+    """One parsed file: import aliases, module constants, local defs."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.aliases: Dict[str, str] = {}  # local name -> dotted origin
+        self.constants: Dict[str, object] = {}  # module-level literal consts
+        self.functions: Dict[str, ast.FunctionDef] = {}  # name -> def (any scope)
+        self.assignments: Dict[str, ast.AST] = {}  # simple name -> RHS node
+        self._collect()
+
+    def _collect(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = (
+                        f"{node.module}.{a.name}"
+                    )
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, node)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                if isinstance(t, ast.Name):
+                    self.assignments.setdefault(t.id, node.value)
+        # module-level constants, folded in statement order so derived
+        # constants (BLOCK = (SUBLANES, LANES)) resolve too.
+        for stmt in self.tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                t = stmt.targets[0]
+                if isinstance(t, ast.Name):
+                    try:
+                        self.constants[t.id] = fold(stmt.value, self.constants)
+                    except ValueError:
+                        pass
+
+    # -- name resolution ---------------------------------------------------
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted origin of a Name/Attribute chain, through import aliases:
+        ``pl.pallas_call`` -> ``jax.experimental.pallas.pallas_call``."""
+        if isinstance(node, ast.Name):
+            return self.aliases.get(node.id, node.id)
+        if isinstance(node, ast.Attribute):
+            base = self.resolve(node.value)
+            return f"{base}.{node.attr}" if base else None
+        return None
+
+    def wrapper_kind(self, node: ast.AST) -> Optional[str]:
+        """Classify a decorator / callee expression as a tracing wrapper:
+        'jit' | 'shard_map' | 'pallas' | 'hof' | None. Handles
+        ``functools.partial(jax.jit, ...)`` decorator factories."""
+        target = node
+        if isinstance(node, ast.Call):
+            r = self.resolve(node.func)
+            if r and r.rsplit(".", 1)[-1] == "partial" and node.args:
+                target = node.args[0]
+            else:
+                target = node.func
+        r = self.resolve(target)
+        if not r:
+            return None
+        last = r.rsplit(".", 1)[-1]
+        if last in JIT_NAMES:
+            return "jit"
+        if last in SHARD_NAMES:
+            return "shard_map"
+        if last in PALLAS_NAMES:
+            return "pallas"
+        if last in HOF_NAMES:
+            return "hof"
+        return None
+
+    def local_def(self, node: ast.AST) -> Optional[ast.FunctionDef]:
+        """Resolve an expression to a FunctionDef in this module: a bare
+        name, a name bound to ``functools.partial(fn, ...)``, or a
+        ``partial(fn, ...)`` call inline."""
+        for _ in range(4):  # bounded chase through simple bindings
+            if isinstance(node, ast.Call):
+                r = self.resolve(node.func)
+                if r and r.rsplit(".", 1)[-1] == "partial" and node.args:
+                    node = node.args[0]
+                    continue
+                return None
+            if isinstance(node, ast.Name):
+                if node.id in self.functions:
+                    return self.functions[node.id]
+                if node.id in self.assignments:
+                    node = self.assignments[node.id]
+                    continue
+                return None
+            return None
+        return None
+
+
+@dataclasses.dataclass
+class TracedFn:
+    fn: ast.FunctionDef
+    kind: str  # 'jit' | 'shard_map' | 'pallas' | 'hof'
+    via: ast.AST  # decorator or wrapper Call node
+
+
+def traced_functions(info: ModuleInfo) -> List[TracedFn]:
+    """Functions whose bodies execute under JAX tracing: decorated with a
+    tracing wrapper, or locally defined and passed to one."""
+    found: Dict[int, TracedFn] = {}
+    for node in ast.walk(info.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                kind = info.wrapper_kind(dec)
+                if kind and kind != "hof":
+                    found.setdefault(id(node), TracedFn(node, kind, dec))
+        elif isinstance(node, ast.Call):
+            kind = info.wrapper_kind(node.func)
+            if kind and node.args:
+                fn = info.local_def(node.args[0])
+                if fn is not None:
+                    k = "jit" if kind == "hof" else kind
+                    found.setdefault(id(fn), TracedFn(fn, k, node))
+    return list(found.values())
+
+
+def collect_array_fields(sources: Sequence[Tuple[str, str]]) -> Set[str]:
+    """Project pre-pass: names of class fields annotated as JAX arrays
+    (``eps: jax.Array``) across all given ``(path, source)`` pairs — the
+    repo-aware taint signal for attribute access on untyped parameters."""
+    fields: Set[str] = set()
+    for path, src in sources:
+        try:
+            tree = ast.parse(src, filename=path)
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for stmt in node.body:
+                if (
+                    isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)
+                    and ARRAY_ANN_RE.search(ast.unparse(stmt.annotation))
+                ):
+                    fields.add(stmt.target.id)
+    return fields
+
+
+@dataclasses.dataclass
+class Event:
+    """One taint-relevant site inside a traced function."""
+
+    kind: str  # 'if' | 'while' | 'assert' | 'ifexp' | 'fstring' |
+    #            'dict_key' | 'range_loop'
+    node: ast.AST
+    fn: ast.FunctionDef
+
+
+def _param_taints(
+    info: ModuleInfo, fn: ast.FunctionDef, kind: str
+) -> Dict[str, int]:
+    args = fn.args
+    taints: Dict[str, int] = {}
+    if kind == "pallas":
+        # positional params are Refs (reads are tracers); keyword-only
+        # params are compile-time constants bound via functools.partial.
+        for a in args.posonlyargs + args.args:
+            taints[a.arg] = TRACER
+        for a in args.kwonlyargs:
+            taints[a.arg] = STATIC
+        return taints
+    positional = args.posonlyargs + args.args
+    defaults: Dict[str, ast.AST] = {}
+    for a, d in zip(reversed(positional), reversed(args.defaults), strict=False):
+        defaults[a.arg] = d
+    for a, d in zip(args.kwonlyargs, args.kw_defaults, strict=True):
+        if d is not None:
+            defaults[a.arg] = d
+    for a in positional + args.kwonlyargs:
+        if a.arg == "self":
+            taints[a.arg] = STATIC
+        elif a.annotation is not None:
+            ann = ast.unparse(a.annotation)
+            taints[a.arg] = TRACER if ARRAY_ANN_RE.search(ann) else STATIC
+        elif isinstance(defaults.get(a.arg), ast.Constant):
+            taints[a.arg] = STATIC
+        else:
+            taints[a.arg] = MAYBE
+    for vararg in (args.vararg, args.kwarg):
+        if vararg is not None:
+            taints[vararg.arg] = MAYBE
+    return taints
+
+
+class FunctionTaint:
+    """Single forward pass over one traced function's body, tracking a
+    name -> taint environment and emitting :class:`Event`s for every
+    tracer-dependent control-flow / hashing site."""
+
+    def __init__(
+        self,
+        info: ModuleInfo,
+        fn: ast.FunctionDef,
+        kind: str,
+        array_fields: Set[str],
+    ):
+        self.info = info
+        self.fn = fn
+        self.kind = kind
+        self.array_fields = array_fields
+        self.env = _param_taints(info, fn, kind)
+        self.events: List[Event] = []
+
+    # -- expression taint --------------------------------------------------
+    def etaint(self, node: ast.AST) -> int:
+        if node is None or isinstance(node, ast.Constant):
+            return STATIC
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, STATIC)
+        if isinstance(node, ast.Attribute):
+            base = self.etaint(node.value)
+            if node.attr in STATIC_ATTRS:
+                return STATIC
+            if base == STATIC:
+                return STATIC
+            if node.attr in self.array_fields:
+                return TRACER
+            # attribute of an actual array (.T, .at, .real) stays an array;
+            # attribute of an *untyped* maybe-array is config access.
+            return TRACER if base == TRACER else STATIC
+        if isinstance(node, (ast.Subscript, ast.Starred)):
+            return self.etaint(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        if isinstance(node, ast.BinOp):
+            return max(self.etaint(node.left), self.etaint(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.etaint(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return max(self.etaint(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return STATIC
+            t = max(
+                self.etaint(node.left),
+                max(self.etaint(c) for c in node.comparators),
+            )
+            # comparison against a string literal is config dispatch, not
+            # arithmetic on array values — cap below the flagging level.
+            operands = [node.left, *node.comparators]
+            if any(
+                isinstance(o, ast.Constant) and isinstance(o.value, str)
+                for o in operands
+            ):
+                return min(t, MAYBE)
+            return t
+        if isinstance(node, ast.IfExp):
+            if self.etaint(node.test) == TRACER:
+                self.events.append(Event("ifexp", node, self.fn))
+            return max(self.etaint(node.body), self.etaint(node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return max((self.etaint(e) for e in node.elts), default=STATIC)
+        if isinstance(node, ast.Dict):
+            for key in node.keys:
+                if key is not None and self.etaint(key) == TRACER:
+                    self.events.append(Event("dict_key", key, self.fn))
+            return max(
+                (self.etaint(v) for v in node.values), default=STATIC
+            )
+        if isinstance(node, ast.JoinedStr):
+            for part in node.values:
+                if (
+                    isinstance(part, ast.FormattedValue)
+                    and self.etaint(part.value) == TRACER
+                ):
+                    self.events.append(Event("fstring", part, self.fn))
+            return STATIC
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self._comp_taint(node, node.elt)
+        if isinstance(node, ast.DictComp):
+            return self._comp_taint(node, node.value)
+        if isinstance(node, ast.NamedExpr):
+            t = self.etaint(node.value)
+            self._bind(node.target, t)
+            return t
+        if isinstance(node, ast.Lambda):
+            return STATIC
+        return STATIC
+
+    def _comp_taint(self, node: ast.AST, elt: ast.AST) -> int:
+        saved = dict(self.env)
+        try:
+            for gen in node.generators:
+                self._bind(gen.target, self.etaint(gen.iter))
+            return self.etaint(elt)
+        finally:
+            self.env = saved
+
+    def _call_taint(self, node: ast.Call) -> int:
+        resolved = self.info.resolve(node.func) or ""
+        last = resolved.rsplit(".", 1)[-1]
+        arg_taint = max(
+            (
+                self.etaint(a)
+                for a in [*node.args, *[kw.value for kw in node.keywords]]
+            ),
+            default=STATIC,
+        )
+        if last in CONCRETIZING and isinstance(node.func, ast.Name):
+            return STATIC
+        if isinstance(node.func, ast.Attribute):
+            recv = self.etaint(node.func.value)
+            if node.func.attr in ARRAY_METHODS and recv >= MAYBE:
+                return TRACER
+            return max(recv if recv == TRACER else STATIC, arg_taint)
+        if resolved.startswith(JAX_NAMESPACES):
+            return arg_taint
+        return arg_taint
+
+    # -- statement walk ----------------------------------------------------
+    def _bind(self, target: ast.AST, taint: int) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = taint
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, taint)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, taint)
+        # Subscript / Attribute targets mutate containers; no env change.
+
+    def run(self) -> List[Event]:
+        for stmt in self.fn.body:
+            self._visit(stmt)
+        return self.events
+
+    def _visit(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested defs are discovered & analyzed independently
+        if isinstance(stmt, ast.Assign):
+            t = self.etaint(stmt.value)
+            for target in stmt.targets:
+                self._bind(target, t)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._bind(stmt.target, self.etaint(stmt.value))
+            return
+        if isinstance(stmt, ast.AugAssign):
+            t = max(self.etaint(stmt.target), self.etaint(stmt.value))
+            self._bind(stmt.target, t)
+            return
+        if isinstance(stmt, ast.If):
+            if self.etaint(stmt.test) == TRACER:
+                self.events.append(Event("if", stmt, self.fn))
+            for s in stmt.body + stmt.orelse:
+                self._visit(s)
+            return
+        if isinstance(stmt, ast.While):
+            if self.etaint(stmt.test) == TRACER:
+                self.events.append(Event("while", stmt, self.fn))
+            for s in stmt.body + stmt.orelse:
+                self._visit(s)
+            return
+        if isinstance(stmt, ast.Assert):
+            if self.etaint(stmt.test) == TRACER:
+                self.events.append(Event("assert", stmt, self.fn))
+            return
+        if isinstance(stmt, ast.For):
+            it = stmt.iter
+            if (
+                isinstance(it, ast.Call)
+                and isinstance(it.func, ast.Name)
+                and it.func.id == "range"
+                and any(self.etaint(a) == TRACER for a in it.args)
+            ):
+                self.events.append(Event("range_loop", stmt, self.fn))
+            self._bind(stmt.target, self.etaint(it))
+            for s in stmt.body + stmt.orelse:
+                self._visit(s)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if item.optional_vars is not None:
+                    self._bind(
+                        item.optional_vars, self.etaint(item.context_expr)
+                    )
+            for s in stmt.body:
+                self._visit(s)
+            return
+        if isinstance(stmt, ast.Try):
+            for s in stmt.body + stmt.orelse + stmt.finalbody:
+                self._visit(s)
+            for handler in stmt.handlers:
+                for s in handler.body:
+                    self._visit(s)
+            return
+        if isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                self.etaint(stmt.value)
+            return
+        # Raise / Pass / Import / Global / Nonlocal / Delete: nothing to do.
+
+
+def analyze_traced(
+    info: ModuleInfo, array_fields: Set[str]
+) -> Iterator[Tuple[TracedFn, List[Event]]]:
+    """Run the taint engine over every traced function in the module."""
+    for tf in traced_functions(info):
+        engine = FunctionTaint(info, tf.fn, tf.kind, array_fields)
+        yield tf, engine.run()
+
+
+def enclosing_functions(
+    tree: ast.Module,
+) -> Dict[int, List[ast.FunctionDef]]:
+    """Map ``id(node)`` -> chain of enclosing FunctionDefs (innermost
+    first) for every node — lexical scope lookup for RPL102."""
+    out: Dict[int, List[ast.FunctionDef]] = {}
+
+    def walk(node: ast.AST, chain: List[ast.FunctionDef]) -> None:
+        for child in ast.iter_child_nodes(node):
+            nxt = chain
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                nxt = [child, *chain]
+            out[id(child)] = nxt
+            walk(child, nxt)
+
+    out[id(tree)] = []
+    walk(tree, [])
+    return out

@@ -1,0 +1,193 @@
+"""reprolint command line: ``python -m tools.reprolint [paths...]``.
+
+Exit status 0 when no violations, 1 otherwise. Violations print as
+``path:line:col: RPLnnn message`` (one per line, sorted), followed by a
+summary. ``--select`` restricts to a comma-separated rule subset (used by
+the fixture tests); ``--list-rules`` prints the rule table.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from tools.reprolint import rules as rules_pkg
+from tools.reprolint.analysis import ModuleInfo, analyze_traced, collect_array_fields
+from tools.reprolint.suppress import apply_suppressions
+from tools.reprolint.violations import Violation
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", ".ruff_cache"}
+
+
+class FileContext:
+    """Per-file bundle handed to each rule's ``check``."""
+
+    def __init__(self, path: str, rel: str, info: ModuleInfo, array_fields):
+        self.path = path
+        self.rel = rel
+        self.info = info
+        self.array_fields = array_fields
+        self._traced = None
+
+    @property
+    def traced_events(self):
+        if self._traced is None:
+            self._traced = list(
+                analyze_traced(self.info, self.array_fields)
+            )
+        return self._traced
+
+
+def discover(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                files.append(p)
+        elif os.path.isdir(p):
+            for root, dirnames, names in os.walk(p):
+                dirnames[:] = [
+                    d
+                    for d in sorted(dirnames)
+                    if d not in _SKIP_DIRS and not d.startswith(".")
+                ]
+                files.extend(
+                    os.path.join(root, n)
+                    for n in sorted(names)
+                    if n.endswith(".py")
+                )
+        else:
+            print(f"reprolint: no such path: {p}", file=sys.stderr)
+    return files
+
+
+def _read_sources(files: Iterable[str]) -> List[Tuple[str, str]]:
+    out = []
+    for f in files:
+        try:
+            with open(f, encoding="utf-8") as fh:
+                out.append((f, fh.read()))
+        except OSError as exc:
+            print(f"reprolint: cannot read {f}: {exc}", file=sys.stderr)
+    return out
+
+
+def lint_paths(
+    paths: Sequence[str],
+    select: Optional[Sequence[str]] = None,
+    repo_root: Optional[str] = None,
+) -> Tuple[List[Violation], int]:
+    """Lint files/directories. Returns (violations, files_scanned).
+
+    The array-field pre-pass always also covers ``<repo_root>/src`` so
+    that linting ``tests/`` alone still knows ``CompactState.t`` is an
+    array. RPL105 (import-and-inspect) runs only when the scan includes
+    files under ``src/repro``.
+    """
+    repo_root = repo_root or os.getcwd()
+    files = discover(paths)
+    sources = _read_sources(files)
+
+    prepass = list(sources)
+    src_dir = os.path.join(repo_root, "src")
+    known = {os.path.abspath(f) for f, _ in sources}
+    if os.path.isdir(src_dir):
+        extra = [
+            f
+            for f in discover([src_dir])
+            if os.path.abspath(f) not in known
+        ]
+        prepass.extend(_read_sources(extra))
+    array_fields = collect_array_fields(prepass)
+
+    active = set(select) if select else None
+
+    def enabled(rule: str) -> bool:
+        return active is None or rule in active
+
+    violations: List[Violation] = []
+    scanned = 0
+    for path, source in sources:
+        rel = os.path.relpath(path, repo_root)
+        if rel.startswith(".."):
+            rel = path
+        try:
+            info = ModuleInfo(rel, source)
+        except SyntaxError as exc:
+            violations.append(
+                Violation(
+                    rel,
+                    exc.lineno or 1,
+                    exc.offset or 0,
+                    "RPL100",
+                    f"syntax error: {exc.msg}",
+                )
+            )
+            continue
+        scanned += 1
+        ctx = FileContext(path, rel, info, array_fields)
+        file_viols: List[Violation] = []
+        for mod in rules_pkg.FILE_RULES:
+            if enabled(mod.RULE):
+                file_viols.extend(mod.check(ctx))
+        kept, rpl100 = apply_suppressions(
+            rel, source, file_viols, rules_pkg.KNOWN_RULES
+        )
+        violations.extend(kept)
+        if enabled("RPL100"):
+            violations.extend(
+                Violation(rel, line, col, "RPL100", msg)
+                for line, col, msg in rpl100
+            )
+
+    touches_repro = any(
+        os.path.abspath(f).startswith(
+            os.path.join(os.path.abspath(repo_root), "src", "repro")
+        )
+        for f, _ in sources
+    )
+    if touches_repro and enabled("RPL105"):
+        for mod in rules_pkg.PROJECT_RULES:
+            violations.extend(mod.check_project(repo_root))
+
+    return sorted(violations), scanned
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-aware static analysis for JAX/Pallas invariants",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src", "tests", "benchmarks"]
+    )
+    parser.add_argument(
+        "--select",
+        help="comma-separated rule ids to run (default: all)",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print rule table and exit"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(rules_pkg.SUMMARIES):
+            print(f"{rule}  {rules_pkg.SUMMARIES[rule]}")
+        return 0
+
+    select = (
+        [s.strip() for s in args.select.split(",") if s.strip()]
+        if args.select
+        else None
+    )
+    violations, scanned = lint_paths(args.paths, select=select)
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(
+            f"reprolint: {len(violations)} violation(s) in {scanned} file(s)"
+        )
+        return 1
+    print(f"reprolint: clean ({scanned} files)")
+    return 0

@@ -1,0 +1,22 @@
+"""Rule registry. Each per-file rule module exposes ``RULE`` (stable id),
+``SUMMARY``, and ``check(ctx) -> list[Violation]``. RPL105 is a
+project-level import-and-inspect pass with its own entry point.
+"""
+from __future__ import annotations
+
+from tools.reprolint.rules import rpl101, rpl102, rpl103, rpl104, rpl105
+
+FILE_RULES = (rpl101, rpl102, rpl103, rpl104)
+PROJECT_RULES = (rpl105,)
+
+KNOWN_RULES = frozenset(
+    {"RPL100"}
+    | {m.RULE for m in FILE_RULES}
+    | {m.RULE for m in PROJECT_RULES}
+)
+
+SUMMARIES = {
+    "RPL100": "unused or unknown `# reprolint: disable=` suppression",
+    **{m.RULE: m.SUMMARY for m in FILE_RULES},
+    **{m.RULE: m.SUMMARY for m in PROJECT_RULES},
+}

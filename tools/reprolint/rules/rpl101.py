@@ -1,0 +1,55 @@
+"""RPL101 — tracer-unsafe Python control flow.
+
+``if``/``while``/``assert`` (and conditional expressions) whose test
+data-flows from array parameters inside a ``@jax.jit`` / ``shard_map`` /
+Pallas-wrapped function either fail at trace time with a concretization
+error or — worse, with ``static_argnums`` plumbing — silently retrace per
+value. Branch on trace-time config instead, or use ``jnp.where`` /
+``lax.cond`` / ``lax.select`` for value-dependent logic.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from tools.reprolint.violations import Violation
+
+RULE = "RPL101"
+SUMMARY = (
+    "Python if/while/assert on a value derived from traced arrays "
+    "inside a jit/shard_map/pallas function"
+)
+
+_WHAT = {
+    "if": "`if` statement",
+    "while": "`while` loop",
+    "assert": "`assert`",
+    "ifexp": "conditional expression",
+}
+
+_HINT = {
+    "if": "use jnp.where or lax.cond",
+    "while": "use lax.while_loop or lax.fori_loop",
+    "assert": "use checkify or debug.check, or assert on static shapes only",
+    "ifexp": "use jnp.where or lax.select",
+}
+
+
+def check(ctx) -> List[Violation]:
+    out = []
+    for tf, events in ctx.traced_events:
+        for ev in events:
+            if ev.kind not in _WHAT:
+                continue
+            node = ev.node
+            out.append(
+                Violation(
+                    ctx.rel,
+                    node.lineno,
+                    node.col_offset,
+                    RULE,
+                    f"{_WHAT[ev.kind]} on a tracer-derived value inside "
+                    f"{tf.kind}-traced function '{tf.fn.name}' — "
+                    f"{_HINT[ev.kind]}",
+                )
+            )
+    return out

@@ -1,0 +1,156 @@
+"""RPL102 — shard-axis discipline.
+
+Every *string literal* axis name reaching ``lax.psum`` / ``pmean`` /
+``all_gather`` / ``ppermute`` (and friends) must be declared by a mesh or
+``shard_map`` constructed in the same module; axis names resolved from
+function parameters or enclosing-scope bindings always pass. This catches
+a hardcoded ``"data"`` leaking into ``repro.comm.collectives`` — library
+code must receive axis names from its caller so the same collective runs
+under any mesh naming (the renamed-axis smoke test in
+``tests/test_guards.py`` is the runtime twin of this rule).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from tools.reprolint.analysis import ModuleInfo, enclosing_functions
+from tools.reprolint.violations import Violation
+
+RULE = "RPL102"
+SUMMARY = (
+    "hardcoded axis-name literal passed to a lax collective without a "
+    "same-module mesh/shard_map declaring it"
+)
+
+COLLECTIVES = {
+    "psum",
+    "pmean",
+    "pmax",
+    "pmin",
+    "all_gather",
+    "ppermute",
+    "all_to_all",
+    "psum_scatter",
+    "axis_index",
+    "axis_size",
+}
+
+# callables whose string arguments *declare* mesh axis names
+_DECLARERS = {"make_mesh", "Mesh", "AbstractMesh", "shard_map", "make_jax_mesh"}
+
+
+def _axis_arg(call: ast.Call, fn_last: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "axis_name":
+            return kw.value
+    pos = 0 if fn_last in ("axis_index", "axis_size") else 1
+    if len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+def _declared_axes(info: ModuleInfo) -> Set[str]:
+    axes: Set[str] = set()
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = info.resolve(node.func) or ""
+        if resolved.rsplit(".", 1)[-1] not in _DECLARERS:
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                axes.add(sub.value)
+    return axes
+
+
+def _literals(
+    expr: ast.AST,
+    info: ModuleInfo,
+    scope_params: Set[str],
+    depth: int = 0,
+) -> List[Tuple[ast.AST, str]]:
+    """Collect (node, axis_literal) pairs provably hardcoded in ``expr``.
+    Anything resolving to a parameter or an unknown origin contributes
+    nothing (conservative)."""
+    if depth > 4:
+        return []
+    if isinstance(expr, ast.Constant):
+        if isinstance(expr.value, str):
+            return [(expr, expr.value)]
+        return []
+    if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for e in expr.elts:
+            out.extend(_literals(e, info, scope_params, depth + 1))
+        return out
+    if isinstance(expr, ast.Name):
+        if expr.id in scope_params:
+            return []
+        if expr.id in info.constants:
+            val = info.constants[expr.id]
+            vals = val if isinstance(val, tuple) else (val,)
+            return [
+                (expr, v) for v in vals if isinstance(v, str)
+            ]
+        bound = info.assignments.get(expr.id)
+        if bound is not None and not isinstance(bound, ast.Name):
+            return _literals(bound, info, scope_params, depth + 1)
+        return []
+    if isinstance(expr, ast.Starred):
+        return _literals(expr.value, info, scope_params, depth + 1)
+    if isinstance(expr, ast.Subscript):
+        return _literals(expr.value, info, scope_params, depth + 1)
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Add):
+        return _literals(expr.left, info, scope_params, depth + 1) + _literals(
+            expr.right, info, scope_params, depth + 1
+        )
+    if isinstance(expr, ast.Call):
+        resolved = info.resolve(expr.func) or ""
+        if resolved.rsplit(".", 1)[-1] in ("tuple", "list", "sorted") and expr.args:
+            return _literals(expr.args[0], info, scope_params, depth + 1)
+        return []
+    return []
+
+
+def check(ctx) -> List[Violation]:
+    info = ctx.info
+    declared = _declared_axes(info)
+    scopes = enclosing_functions(info.tree)
+    out: List[Violation] = []
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = info.resolve(node.func) or ""
+        last = resolved.rsplit(".", 1)[-1]
+        if last not in COLLECTIVES or ".lax." not in f".{resolved}":
+            continue
+        axis = _axis_arg(node, last)
+        if axis is None:
+            continue
+        params: Set[str] = set()
+        for fn in scopes.get(id(node), []):
+            a = fn.args
+            for arg in (
+                a.posonlyargs + a.args + a.kwonlyargs
+            ):
+                params.add(arg.arg)
+            for var in (a.vararg, a.kwarg):
+                if var is not None:
+                    params.add(var.arg)
+        for lit_node, name in _literals(axis, info, params):
+            if name in declared:
+                continue
+            out.append(
+                Violation(
+                    ctx.rel,
+                    lit_node.lineno,
+                    lit_node.col_offset,
+                    RULE,
+                    f"hardcoded axis name '{name}' passed to lax.{last} — "
+                    "thread axis names from the caller (parameter or "
+                    "shard_map axis_names); no mesh in this module "
+                    "declares it",
+                )
+            )
+    return out

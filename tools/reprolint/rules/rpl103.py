@@ -1,0 +1,165 @@
+"""RPL103 — Pallas kernel constraints.
+
+Applies to modules that import ``jax.experimental.pallas`` (in the repo:
+``src/repro/kernels/``). Checks:
+
+* ``BlockSpec`` tile dims must be multiples of the f32 (sublane, lane)
+  = (8, 128) TPU layout. Dims equal to 1 are exempt — degenerate
+  per-tile blocks like ``(1, m)`` candidate outputs and ``(1, 1)``
+  scalar accumulators are legal and idiomatic. Dims that cannot be
+  constant-folded from module-level constants are skipped.
+* no ``float64`` anywhere in a kernel module (TPU has no f64; the repo's
+  exactness certificate is defined for f32 state).
+* no Python ``for ... in range(<tracer>)`` inside a kernel body — loop
+  bounds must be compile-time constants (bind them as keyword-only
+  ``functools.partial`` parameters, as ``fused_encode.py`` does).
+* literal ``pl.program_id(axis)`` must be < the maximum grid rank of any
+  ``pallas_call`` in the module.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.reprolint.analysis import fold
+from tools.reprolint.violations import Violation
+
+RULE = "RPL103"
+SUMMARY = (
+    "Pallas kernel constraint: BlockSpec tiling, float64, "
+    "tracer-range loop, or program_id axis out of grid rank"
+)
+
+SUBLANE, LANE = 8, 128
+
+
+def _is_pallas_module(info) -> bool:
+    return any(
+        "jax.experimental.pallas" in origin
+        for origin in info.aliases.values()
+    )
+
+
+def _grid_rank(call: ast.Call) -> Optional[int]:
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                return len(kw.value.elts)
+            return 1  # scalar grid
+    return None
+
+
+def check(ctx) -> List[Violation]:
+    info = ctx.info
+    if not _is_pallas_module(info):
+        return []
+    out: List[Violation] = []
+
+    max_rank = 0
+    any_grid = False
+    for node in ast.walk(info.tree):
+        if isinstance(node, ast.Call):
+            resolved = info.resolve(node.func) or ""
+            if resolved.rsplit(".", 1)[-1] == "pallas_call":
+                rank = _grid_rank(node)
+                if rank is not None:
+                    any_grid = True
+                    max_rank = max(max_rank, rank)
+
+    for node in ast.walk(info.tree):
+        if isinstance(node, ast.Attribute):
+            resolved = info.resolve(node) or ""
+            if resolved in ("jax.numpy.float64", "numpy.float64"):
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        node.lineno,
+                        node.col_offset,
+                        RULE,
+                        "float64 in a Pallas kernel module — TPU kernels "
+                        "and the exactness certificate are f32-only",
+                    )
+                )
+        if isinstance(node, ast.Constant) and node.value == "float64":
+            out.append(
+                Violation(
+                    ctx.rel,
+                    node.lineno,
+                    node.col_offset,
+                    RULE,
+                    "dtype string 'float64' in a Pallas kernel module — "
+                    "TPU kernels are f32-only",
+                )
+            )
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = info.resolve(node.func) or ""
+        last = resolved.rsplit(".", 1)[-1]
+        if last == "BlockSpec":
+            shape = None
+            if node.args:
+                shape = node.args[0]
+            for kw in node.keywords:
+                if kw.arg == "block_shape":
+                    shape = kw.value
+            if shape is not None:
+                try:
+                    dims = fold(shape, info.constants)
+                except ValueError:
+                    dims = None
+                if isinstance(dims, tuple) and len(dims) >= 2:
+                    checks = (
+                        (dims[-1], LANE, "minor (lane)"),
+                        (dims[-2], SUBLANE, "second-minor (sublane)"),
+                    )
+                    for dim, mult, what in checks:
+                        if (
+                            isinstance(dim, int)
+                            and dim != 1
+                            and dim % mult != 0
+                        ):
+                            out.append(
+                                Violation(
+                                    ctx.rel,
+                                    node.lineno,
+                                    node.col_offset,
+                                    RULE,
+                                    f"BlockSpec {what} dim {dim} is not a "
+                                    f"multiple of {mult} (f32 tile is "
+                                    f"({SUBLANE}, {LANE}); dim 1 is "
+                                    "exempt)",
+                                )
+                            )
+        elif last == "program_id" and any_grid:
+            if node.args and isinstance(node.args[0], ast.Constant):
+                axis = node.args[0].value
+                if isinstance(axis, int) and axis >= max_rank:
+                    out.append(
+                        Violation(
+                            ctx.rel,
+                            node.lineno,
+                            node.col_offset,
+                            RULE,
+                            f"pl.program_id({axis}) but the largest grid "
+                            f"in this module has rank {max_rank}",
+                        )
+                    )
+
+    for tf, events in ctx.traced_events:
+        if tf.kind != "pallas":
+            continue
+        for ev in events:
+            if ev.kind == "range_loop":
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        ev.node.lineno,
+                        ev.node.col_offset,
+                        RULE,
+                        "Python loop over a tracer-dependent range inside "
+                        f"kernel '{tf.fn.name}' — bind the bound as a "
+                        "static keyword-only parameter "
+                        "(functools.partial) or use lax.fori_loop",
+                    )
+                )
+    return out

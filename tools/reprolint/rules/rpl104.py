@@ -1,0 +1,174 @@
+"""RPL104 — recompilation hazards.
+
+* unhashable (list/dict/set) or array-valued defaults on jitted
+  functions: array defaults bake a fresh constant per trace and mutable
+  defaults are shared across calls;
+* ``static_argnums`` / ``static_argnames`` pointing at array-annotated
+  parameters: every distinct array value forces a retrace;
+* f-strings or dict-literal keys derived from traced values inside a
+  traced function: hashing/formatting a tracer concretizes it;
+* ``jax.jit(fn)`` on a plain function name inside a loop: each
+  iteration builds a fresh wrapper with an empty compilation cache
+  (lambdas are exempt — rebinding a lambda per iteration is sometimes
+  deliberate; hoisting a *named* function never loses anything).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.reprolint.analysis import ARRAY_ANN_RE
+from tools.reprolint.violations import Violation
+
+RULE = "RPL104"
+SUMMARY = (
+    "recompilation hazard: bad jit defaults, static_argnums on arrays, "
+    "tracer-keyed hashing, or jit-in-loop"
+)
+
+_ARRAY_CTORS = {"array", "asarray", "zeros", "ones", "full", "arange", "eye"}
+
+
+def _bad_default(node: ast.AST, info) -> str:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return "unhashable (mutable) default"
+    if isinstance(node, ast.Call):
+        resolved = info.resolve(node.func) or ""
+        parts = resolved.rsplit(".", 1)
+        if parts[-1] in _ARRAY_CTORS and resolved.startswith(
+            ("jax.numpy", "numpy", "jax.")
+        ):
+            return "array-valued default"
+    return ""
+
+
+def _param_names(fn: ast.FunctionDef) -> List[ast.arg]:
+    a = fn.args
+    return a.posonlyargs + a.args
+
+
+def check(ctx) -> List[Violation]:
+    info = ctx.info
+    out: List[Violation] = []
+
+    for tf, events in ctx.traced_events:
+        fn = tf.fn
+        if tf.kind == "jit":
+            a = fn.args
+            positional = a.posonlyargs + a.args
+            paired = [
+                *zip(reversed(positional), reversed(a.defaults), strict=False),
+                *(
+                    (arg, d)
+                    for arg, d in zip(a.kwonlyargs, a.kw_defaults, strict=True)
+                    if d is not None
+                ),
+            ]
+            for arg, default in paired:
+                why = _bad_default(default, info)
+                if why:
+                    out.append(
+                        Violation(
+                            ctx.rel,
+                            default.lineno,
+                            default.col_offset,
+                            RULE,
+                            f"{why} for parameter '{arg.arg}' of jitted "
+                            f"function '{fn.name}' — pass it explicitly "
+                            "or build it inside the function",
+                        )
+                    )
+            # static_argnums / static_argnames on array-annotated params
+            via = tf.via
+            if isinstance(via, ast.Call):
+                for kw in via.keywords:
+                    if kw.arg not in ("static_argnums", "static_argnames"):
+                        continue
+                    vals = (
+                        kw.value.elts
+                        if isinstance(kw.value, (ast.Tuple, ast.List))
+                        else [kw.value]
+                    )
+                    params = _param_names(fn)
+                    for v in vals:
+                        if not isinstance(v, ast.Constant):
+                            continue
+                        arg = None
+                        if isinstance(v.value, int) and 0 <= v.value < len(
+                            params
+                        ):
+                            arg = params[v.value]
+                        elif isinstance(v.value, str):
+                            allp = params + fn.args.kwonlyargs
+                            arg = next(
+                                (p for p in allp if p.arg == v.value), None
+                            )
+                        if (
+                            arg is not None
+                            and arg.annotation is not None
+                            and ARRAY_ANN_RE.search(
+                                ast.unparse(arg.annotation)
+                            )
+                        ):
+                            out.append(
+                                Violation(
+                                    ctx.rel,
+                                    v.lineno,
+                                    v.col_offset,
+                                    RULE,
+                                    f"{kw.arg} marks array parameter "
+                                    f"'{arg.arg}' of '{fn.name}' static — "
+                                    "every distinct value retraces",
+                                )
+                            )
+        for ev in events:
+            if ev.kind == "fstring":
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        ev.node.lineno,
+                        ev.node.col_offset,
+                        RULE,
+                        "f-string interpolates a traced value inside "
+                        f"'{fn.name}' — formatting concretizes the "
+                        "tracer; use jax.debug.print",
+                    )
+                )
+            elif ev.kind == "dict_key":
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        ev.node.lineno,
+                        ev.node.col_offset,
+                        RULE,
+                        "dict key derived from a traced value inside "
+                        f"'{fn.name}' — hashing a tracer concretizes it",
+                    )
+                )
+
+    # jax.jit(named_fn) inside a loop (dedupe nested-loop double walks)
+    seen = set()
+    for node in ast.walk(info.tree):
+        if not isinstance(node, (ast.For, ast.While)):
+            continue
+        for sub in ast.walk(node):
+            if id(sub) in seen:
+                continue
+            if not isinstance(sub, ast.Call):
+                continue
+            if info.wrapper_kind(sub.func) != "jit":
+                continue
+            if sub.args and isinstance(sub.args[0], ast.Name):
+                seen.add(id(sub))
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        sub.lineno,
+                        sub.col_offset,
+                        RULE,
+                        f"jax.jit({sub.args[0].id}) inside a loop builds a "
+                        "fresh wrapper (empty compile cache) every "
+                        "iteration — hoist the jit out of the loop",
+                    )
+                )
+    return out

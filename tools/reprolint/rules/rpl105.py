@@ -1,0 +1,136 @@
+"""RPL105 — codec/registry completeness (import-and-inspect).
+
+Runs against the *same binary* the tests import: every concrete ``Codec``
+subclass must define ``encode``/``decode``/``wire_bits`` in its own body,
+must either override ``encode_fused`` (and declare ``supports_fused =
+True``) or explicitly opt out, and must be registered in ``CODECS``.
+Every ``Collective`` subclass must define ``reference`` and ``shard`` and
+be registered in ``COLLECTIVES``. A codec that quietly inherits the base
+``encode_fused`` (which raises) while claiming ``supports_fused = True``
+would pass unit tests that never exercise the fused path and then fail
+inside a compiled fastpath — exactly the drift this rule exists to stop.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import sys
+from typing import Callable, List, Optional
+
+from tools.reprolint.violations import Violation
+
+RULE = "RPL105"
+SUMMARY = (
+    "Codec/Collective subclass with an incomplete surface or missing "
+    "registry entry (import-and-inspect)"
+)
+
+
+def _anchor(cls, rel: Callable[[str], str]):
+    try:
+        path = inspect.getsourcefile(cls)
+        _, line = inspect.getsourcelines(cls)
+    except (OSError, TypeError):
+        return "<unknown>", 1
+    return rel(path), line
+
+
+def _owns(cls, name: str) -> bool:
+    return name in vars(cls)
+
+
+def check_project(
+    repo_root: str, rel: Optional[Callable[[str], str]] = None
+) -> List[Violation]:
+    rel = rel or (lambda p: os.path.relpath(p, repo_root))
+    src = os.path.join(repo_root, "src")
+    if os.path.isdir(src) and src not in sys.path:
+        sys.path.insert(0, src)
+    try:
+        from repro.comm.codec import CODECS, Codec
+        from repro.comm.collectives import COLLECTIVES, Collective
+    except Exception as exc:  # pragma: no cover - import environment issue
+        return [
+            Violation(
+                "src/repro/comm",
+                1,
+                0,
+                RULE,
+                f"could not import codec/collective registries: {exc!r}",
+            )
+        ]
+
+    out: List[Violation] = []
+
+    def walk(base):
+        for sub in base.__subclasses__():
+            yield sub
+            yield from walk(sub)
+
+    registered_codecs = set(type(v) for v in CODECS.values())
+    for cls in walk(Codec):
+        path, line = _anchor(cls, rel)
+
+        def flag(msg: str, cls=cls, path=path, line=line) -> None:
+            out.append(Violation(path, line, 0, RULE, f"{cls.__name__}: {msg}"))
+
+        for meth in ("encode", "decode", "wire_bits"):
+            if not any(_owns(k, meth) for k in cls.__mro__[:-1] if k is not Codec):
+                flag(
+                    f"does not define {meth}() — inherits the abstract "
+                    "base implementation"
+                )
+        owns_fused = any(
+            _owns(k, "encode_fused") for k in cls.__mro__[:-1] if k is not Codec
+        )
+        declares = any(
+            _owns(k, "supports_fused") for k in cls.__mro__[:-1] if k is not Codec
+        )
+        if cls.supports_fused and not owns_fused:
+            flag(
+                "claims supports_fused=True but inherits the raising base "
+                "encode_fused()"
+            )
+        if owns_fused and not cls.supports_fused:
+            flag(
+                "defines encode_fused() but supports_fused is False — "
+                "dead fused path; set supports_fused=True or drop it"
+            )
+        if not owns_fused and not declares:
+            flag(
+                "must set supports_fused=False explicitly (or implement "
+                "encode_fused) so fusability is a deliberate choice"
+            )
+        if cls.__subclasses__():
+            continue  # intermediate base; registration applies to leaves
+        if cls not in registered_codecs:
+            flag("not registered in repro.comm.codec.CODECS")
+
+    registered_colls = set(type(v) for v in COLLECTIVES.values())
+    for cls in walk(Collective):
+        path, line = _anchor(cls, rel)
+        for meth in ("reference", "shard"):
+            if not any(
+                _owns(k, meth) for k in cls.__mro__[:-1] if k is not Collective
+            ):
+                out.append(
+                    Violation(
+                        path,
+                        line,
+                        0,
+                        RULE,
+                        f"{cls.__name__}: does not define {meth}()",
+                    )
+                )
+        if not cls.__subclasses__() and cls not in registered_colls:
+            out.append(
+                Violation(
+                    path,
+                    line,
+                    0,
+                    RULE,
+                    f"{cls.__name__}: not registered in "
+                    "repro.comm.collectives.COLLECTIVES",
+                )
+            )
+    return out

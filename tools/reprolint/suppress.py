@@ -1,0 +1,69 @@
+"""Same-line ``# reprolint: disable=RPLnnn`` suppressions.
+
+Comments are located with :mod:`tokenize` (not a per-line regex) so that
+example suppressions *inside string literals* — fixture sources embedded in
+the rule test modules — are never mistaken for live suppressions. Every
+suppression must match at least one violation on its line or it is itself
+reported as RPL100, which keeps stale suppressions from hiding future
+regressions.
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from typing import Dict, List, Set, Tuple
+
+SUPPRESS_RE = re.compile(r"reprolint:\s*disable=([A-Z0-9,\s]+)")
+CODE_RE = re.compile(r"^RPL\d{3}$")
+
+
+def parse_suppressions(source: str) -> Dict[int, Tuple[Set[str], int]]:
+    """Map line number -> (rule codes, comment column) for every real
+    ``# reprolint: disable=...`` comment in ``source``."""
+    out: Dict[int, Tuple[Set[str], int]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+            out[tok.start[0]] = (codes, tok.start[1])
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def apply_suppressions(path, source, violations, known_rules):
+    """Filter ``violations`` through the file's suppressions. Returns
+    (kept_violations, rpl100_list) where rpl100_list holds (line, col,
+    message) entries for unused or unknown suppressions."""
+    supp = parse_suppressions(source)
+    used: Dict[int, Set[str]] = {line: set() for line in supp}
+    kept = []
+    for v in violations:
+        codes, _ = supp.get(v.line, (set(), 0))
+        if v.rule in codes:
+            used[v.line].add(v.rule)
+        else:
+            kept.append(v)
+    rpl100: List[Tuple[int, int, str]] = []
+    for line, (codes, col) in sorted(supp.items()):
+        for code in sorted(codes):
+            if not CODE_RE.match(code) or code not in known_rules:
+                rpl100.append(
+                    (line, col, f"unknown rule '{code}' in suppression")
+                )
+            elif code not in used[line]:
+                rpl100.append(
+                    (
+                        line,
+                        col,
+                        f"unused suppression for {code} "
+                        "(no matching violation on this line)",
+                    )
+                )
+    return kept, rpl100
