@@ -1,0 +1,122 @@
+"""Adaptive-k fronts — bytes-on-wire vs distance-to-optimum (ISSUE 8).
+
+The paper fixes S = k/J per run; the adaptive controller
+(:mod:`repro.comm.controller`) spends wire bytes only when the error
+budget demands them. This bench draws both fronts on the Fig-3 linear
+regression: a grid of *static* sparsities (each point = one whole run at
+fixed k) against a grid of *error budgets* (each point = one adaptive run
+whose k trajectory the controller chose), with bytes priced per round at
+the round's **effective** k through :func:`repro.comm.round_wire_bits` —
+``Codec.wire_bits`` keeps the pricing codec-agnostic.
+
+Rows: ``adaptive/static/<kind>/S=...`` and ``adaptive/budget=...`` carry
+``gap@STEPS`` and total per-worker MB in ``derived`` (accounting rows,
+us = 0); ``adaptive/step`` times the jitted adaptive round itself — the
+dynamic-k machinery rides the perf gate alongside the static benches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro import comm
+from repro.core import DistributedSim, SparsifierConfig
+from repro.data.pipeline import linreg_grad_fn, make_linreg
+
+N, J = 10, 200
+STEPS = 600
+CODEC = "coo_fp32"
+K_MAX = 0.25  # adaptive capacity: a quarter of the leaf
+STATIC_S = (0.02, 0.05, 0.1, 0.25)
+# the closed loop equilibrates ||eps||/||g_agg|| ~= budget on this
+# problem (plateau error feedback), so the grid brackets the static
+# sparsity fronts: ~2 saturates near k_max, ~10 hugs k_min
+BUDGETS = (2.0, 5.0, 10.0)
+
+
+def _make_sim(cfg, adaptive=None):
+    data = make_linreg(3, N, J, 400, sigma2=2.0, homogeneous=False)
+    sim = DistributedSim(
+        linreg_grad_fn(data), N, J, cfg, learning_rate=1e-2,
+        collective="sparse_allgather", codec=CODEC, adaptive_k=adaptive,
+    )
+    return sim, data
+
+
+def _static_point(kind: str, S: float):
+    cfg = SparsifierConfig(kind=kind, sparsity=S, mu=16.0)
+    sim, data = _make_sim(cfg)
+    _, tr = sim.run(
+        jnp.zeros(J), STEPS,
+        trace_fn=lambda th: jnp.linalg.norm(th - data.theta_star),
+    )
+    k = max(1, int(np.ceil(S * J) - 1e-9))
+    bytes_total = STEPS * comm.round_wire_bits(CODEC, J, k) // 8
+    return float(np.asarray(tr)[-1]), bytes_total
+
+
+def _adaptive_point(budget: float):
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.05, mu=16.0)
+    ctrl = comm.AdaptiveKController(budget=budget, k_min=1, k_max=K_MAX)
+    sim, data = _make_sim(cfg, adaptive=ctrl)
+    state0 = sim.init(jnp.zeros(J))
+    _, tr = sim.run(
+        jnp.zeros(J), STEPS,
+        trace_state_fn=lambda s: (
+            jnp.linalg.norm(s.theta - data.theta_star), s.ctrl.k
+        ),
+    )
+    gaps, ks_next = np.asarray(tr[0]), np.asarray(tr[1])
+    # round t sends the k planned after round t-1; round 0 the init k
+    ks_used = np.concatenate([[int(state0.ctrl.k)], ks_next[:-1]])
+    bytes_total = sum(
+        comm.round_wire_bits(CODEC, J, int(k)) for k in ks_used
+    ) // 8
+    return float(gaps[-1]), bytes_total, int(ks_next[-1])
+
+
+def run():
+    rows = []
+    fronts = {}
+    for kind in ("topk", "regtopk"):
+        for S in STATIC_S:
+            gap, b = _static_point(kind, S)
+            fronts[(kind, S)] = (gap, b)
+            rows.append(row(
+                f"adaptive/static/{kind}/S={S}", 0.0,
+                f"gap@{STEPS}={gap:.3e} wire_MB={b / 1e6:.3f}",
+            ))
+    for budget in BUDGETS:
+        gap, b, k_last = _adaptive_point(budget)
+        fronts[("budget", budget)] = (gap, b)
+        rows.append(row(
+            f"adaptive/budget={budget}", 0.0,
+            f"gap@{STEPS}={gap:.3e} wire_MB={b / 1e6:.3f} k_final={k_last}",
+        ))
+    assert all(np.isfinite(g) for g, _ in fronts.values()), fronts
+    # the controller never prices above its own capacity ceiling
+    cap_bytes = STEPS * comm.round_wire_bits(
+        CODEC, J, int(np.ceil(K_MAX * J))
+    ) // 8
+    assert all(
+        b <= cap_bytes for key, (_, b) in fronts.items() if key[0] == "budget"
+    )
+
+    # timed row: one jitted adaptive round (dynamic-k selection + control
+    # law), state threaded to keep the measurement honest
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.05, mu=16.0)
+    ctrl = comm.AdaptiveKController(budget=1.0, k_min=1, k_max=K_MAX)
+    sim, _ = _make_sim(cfg, adaptive=ctrl)
+    step = jax.jit(lambda s: sim.step_fn(s)[0])
+    state = step(sim.init(jnp.zeros(J)))  # warm the cache + advance once
+    us = time_call(step, state, iters=10)
+    rows.append(row("adaptive/step", us, f"N={N} J={J} cap={K_MAX}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+
+    bench_main(run, "adaptive_bench")

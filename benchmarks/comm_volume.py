@@ -2,7 +2,7 @@
 
 Per-round, per-worker wire volume for each architecture's J at the assigned
 sparsities: the words table (dense vs fp32-COO allgather, derived from the
-codec's exact ``wire_bits`` — the migration off the deprecated
+codec's exact ``wire_bits`` — the migration off the removed
 ``cost.wire_words_per_worker`` is documented in ``docs/comm.md``) plus the
 ``repro.comm`` codec bytes through the alpha–beta cost model — the quantity
 the paper's technique actually reduces. Cross-checked against the dry-run

@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   autotune_bench— per-leaf (codec x collective) planner + calibration (ISSUE 2)
   straggler_bench — convergence gap vs dropout x sparsity, partial-round
                   cost asserts (ISSUE 4)
+  adaptive_bench — error-budget vs static-k fronts: bytes-on-wire vs
+                  distance-to-optimum (ISSUE 8)
   kernel_bench  — Pallas kernel microbenches
   roofline      — §Roofline terms from the dry-run artifacts
   perf_summary  — §Perf hillclimb before/after + multi-pod scaling
@@ -37,6 +39,7 @@ MODULES = [
     "comm_bench",
     "autotune_bench",
     "straggler_bench",
+    "adaptive_bench",
     "kernel_bench",
     "serve_bench",
     "roofline",

@@ -32,8 +32,14 @@ All gradient aggregation in :mod:`repro.core.distributed` and
 :mod:`repro.core.simulator` routes through this package, selected by
 ``DistConfig.codec`` / ``DistConfig.collective`` ("auto" plans per leaf).
 """
-from repro.comm import autotune, calibrate, fastpath
-from repro.comm.autotune import CommPlan, LeafDecision, choose_leaf, plan_tree
+from repro.comm import autotune, calibrate, controller, fastpath
+from repro.comm.autotune import (
+    CommPlan,
+    LeafDecision,
+    choose_leaf,
+    plan_tree,
+    replan,
+)
 from repro.comm.calibrate import (
     Calibration,
     Sample,
@@ -60,6 +66,12 @@ from repro.comm.collectives import (
     SparseAllgather,
     get_collective,
 )
+from repro.comm.controller import (
+    AdaptiveKController,
+    ControllerState,
+    parse_adaptive_k,
+    round_wire_bits,
+)
 from repro.comm.cost import (
     AlphaBeta,
     CostEstimate,
@@ -72,7 +84,6 @@ from repro.comm.cost import (
     payload_nbytes,
     predict,
     predicted_bytes,
-    wire_words_per_worker,
 )
 from repro.comm.fastpath import (
     FASTPATH_MODES,
@@ -89,6 +100,7 @@ from repro.comm.participation import (
 )
 
 __all__ = [
+    "AdaptiveKController",
     "AlphaBeta",
     "BitmapDense",
     "CODECS",
@@ -97,6 +109,7 @@ __all__ = [
     "Codec",
     "Collective",
     "CommPlan",
+    "ControllerState",
     "CooFp32",
     "CooIdxDelta",
     "CooQ8",
@@ -118,6 +131,7 @@ __all__ = [
     "calibrate",
     "calibrate_topo",
     "choose_leaf",
+    "controller",
     "delta_index_dtype",
     "fastpath",
     "fit_alpha_beta",
@@ -126,6 +140,7 @@ __all__ = [
     "get_codec",
     "get_collective",
     "measured_bytes",
+    "parse_adaptive_k",
     "parse_link_topo",
     "parse_participation",
     "pattern_axes",
@@ -134,7 +149,8 @@ __all__ = [
     "predict",
     "predicted_bytes",
     "renormalize_weights",
+    "replan",
+    "round_wire_bits",
     "run_calibration",
-    "wire_words_per_worker",
     "worker_index",
 ]

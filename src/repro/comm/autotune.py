@@ -282,3 +282,74 @@ def plan_tree(
         total_seconds=sum(d.cost.seconds for d in flat),
         model=model,
     )
+
+
+def replan(
+    plan: Any,
+    dp_sizes: Sequence[int],
+    samples: Sequence[Any],
+    *,
+    k_overrides: Any = None,
+    codecs: Optional[Sequence[str]] = None,
+    collectives: Optional[Sequence[str]] = None,
+    allow_lossy: bool = False,
+    word_bytes: int = WORD_BYTES,
+    participants: Optional[float] = None,
+    fastpath: str = "off",
+    compute: Optional[fastpath_lib.ThroughputTable] = None,
+) -> CommPlan:
+    """Re-plan every leaf from *measured* round samples, mid-training.
+
+    The static cost model the first plan scored with is a prior; after a
+    few rounds the ``calibrate`` machinery has real ``Sample`` rows
+    (measured seconds against the ring pattern's message/byte counts —
+    from :func:`repro.comm.calibrate.time_collective` on the live mesh,
+    or assembled from the training loop's own round timings). ``replan``
+    fits a fresh :class:`AlphaBeta` from those rows with
+    :func:`repro.comm.calibrate.fit_alpha_beta` and re-runs
+    :func:`plan_tree` under the fitted model, so the per-leaf
+    (codec x collective) choices track what the wire actually does.
+
+    ``k_overrides`` (optional) is a pytree of ints mirroring ``plan``:
+    the adaptive controller's *current* per-leaf k, so replanning scores
+    the wire at the k actually being sent rather than the static plan's.
+    Only the scoring k changes — payload capacity and state shapes are
+    the caller's concern (they stay at ``k_max``).
+
+    >>> from repro.comm.calibrate import Sample
+    >>> from jax.sharding import PartitionSpec as P
+    >>> from repro.core.distributed import LeafPlan
+    >>> tree = {"w": LeafPlan((4096,), (4096,), 4096, 41, P(None))}
+    >>> rows = [Sample("probe", i, m, b, m * 1e-4 + b * 1e-9)
+    ...         for i, (m, b) in enumerate([(7, 1000), (14, 100000),
+    ...                                     (3, 5000000)])]
+    >>> cp = replan(tree, (8,), rows)
+    >>> cp.decisions["w"].codec  # alpha-heavy fit -> fewest messages win
+    'coo_idx_delta'
+    >>> cp.model.links[0].alpha >= 9e-5
+    True
+    """
+    from repro.comm.calibrate import fit_alpha_beta
+    from repro.core.distributed import LeafPlan  # cycle-free at call time
+
+    fitted = fit_alpha_beta(list(samples))
+    scored = plan
+    if k_overrides is not None:
+        scored = jax.tree.map(
+            lambda p, kk: p._replace(k=int(kk)),
+            plan,
+            k_overrides,
+            is_leaf=lambda x: isinstance(x, LeafPlan),
+        )
+    return plan_tree(
+        scored,
+        dp_sizes,
+        fitted,
+        codecs=codecs,
+        collectives=collectives,
+        allow_lossy=allow_lossy,
+        word_bytes=word_bytes,
+        participants=participants,
+        fastpath=fastpath,
+        compute=compute,
+    )

@@ -1,0 +1,267 @@
+"""Adaptive compression controller: error-budget-driven per-round k.
+
+The paper fixes the sparsification factor S = k/J for the whole run; the
+adaptive-sparsification literature ("Adaptive Top-K in SGD", arXiv:
+2210.13532; "Rethinking gradient sparsification as total error
+minimization", arXiv:2108.00951) shows the right k is a *feedback*
+quantity: the accumulated sparsification error ``||eps||`` relative to the
+aggregated gradient ``||g_agg||`` measures how much signal the wire is
+withholding, and k should grow when that ratio overshoots a target budget
+and shrink when it undershoots.
+
+:class:`AdaptiveKController` implements that loop per leaf:
+
+* the measured ratio ``||eps|| / ||g_agg||`` is smoothed with the same
+  exponential discounting ``SparsifierConfig.momentum`` uses
+  (``r <- m * r + (1 - m) * raw``);
+* the *pressure* ``r / budget`` drives a multiplicative k update, clamped
+  to one ``gain`` factor per round and to static bounds ``[k_min, k_max]``;
+* a relative ``hysteresis`` dead band around pressure 1 keeps k still when
+  the ratio merely jitters about the budget, so the payload capacity is
+  not re-planned on noise.
+
+Everything the traced step touches (:meth:`AdaptiveKController.observe`,
+:meth:`AdaptiveKController.plan_k`, :class:`ControllerState`) is pure
+``jnp`` on scalar operands — k is a *dynamic* operand of the compiled
+round, never a trace constant, so a k change does not retrace (the payload
+rides at the static capacity ``k_max``; see
+``repro.core.compact.compact_select``'s ``k_dyn``).
+
+Wire pricing stays codec-agnostic through :func:`round_wire_bits`: the
+controller only ever reasons about k, and any bytes accounting delegates
+to ``Codec.wire_bits`` — a future entropy-coded index codec changes the
+bits-per-coordinate without touching the control law.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30  # guards the error ratio against a zero aggregated gradient
+
+
+class ControllerState(NamedTuple):
+    """Per-leaf controller state (all scalars — cheap to carry/replicate).
+
+    err_ratio — discounted ``||eps|| / ||g_agg||`` estimate (f32).
+    k         — the k the *next* round will send (int32).
+    t         — rounds observed (int32); t == 0 skips the discounting.
+    """
+
+    err_ratio: jax.Array
+    k: jax.Array
+    t: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveKController:
+    """Maps posterior error statistics to a per-round k.
+
+    budget     — target error ratio ``||eps|| / ||g_agg||`` the loop
+                 regulates to (the total-error budget, normalized).
+    k_min/k_max— per-leaf bounds; values in (0, 1) are fractions of the
+                 leaf length (resolved like ``sparsity_to_k``), values
+                 >= 1 are absolute coordinate counts. ``k_max`` is also
+                 the static payload *capacity* the traced step allocates.
+    momentum   — exponential discount on the measured ratio
+                 (``SparsifierConfig.momentum``-style; 0 disables).
+    hysteresis — relative dead band around pressure 1: within
+                 ``[1 - h, 1 + h]`` the previous k is kept.
+    gain       — max multiplicative k step per round (> 1).
+    """
+
+    budget: float
+    k_min: float = 1.0
+    k_max: float = 0.25
+    momentum: float = 0.9
+    hysteresis: float = 0.25
+    gain: float = 2.0
+
+    def __post_init__(self):
+        if not self.budget > 0:
+            raise ValueError(f"budget must be > 0, got {self.budget}")
+        if not 0 <= self.momentum < 1:
+            raise ValueError(
+                f"momentum must be in [0, 1), got {self.momentum}"
+            )
+        if self.hysteresis < 0:
+            raise ValueError(
+                f"hysteresis must be >= 0, got {self.hysteresis}"
+            )
+        if not self.gain > 1:
+            raise ValueError(f"gain must be > 1, got {self.gain}")
+        if self.k_min <= 0 or self.k_max <= 0:
+            raise ValueError(
+                f"k bounds must be > 0, got [{self.k_min}, {self.k_max}]"
+            )
+        same_kind = (self.k_min < 1) == (self.k_max < 1)
+        if same_kind and self.k_min > self.k_max:
+            raise ValueError(
+                f"k_min {self.k_min} > k_max {self.k_max}"
+            )
+
+    # -- static (trace-time) resolution -----------------------------------
+    def bounds(self, length: int) -> Tuple[int, int]:
+        """Resolve ``[k_min, k_max]`` to absolute ints for one leaf.
+
+        Fractions go through the same epsilon-tolerant ceil as the static
+        sparsity (``selectors.sparsity_to_k``); everything clips to
+        ``[1, length]`` and the pair must stay ordered after resolution.
+
+        >>> AdaptiveKController(budget=0.5).bounds(1000)
+        (1, 250)
+        >>> AdaptiveKController(budget=0.5, k_min=0.01, k_max=64).bounds(1000)
+        (10, 64)
+        """
+        from repro.core.selectors import sparsity_to_k
+
+        def resolve(b: float) -> int:
+            if b < 1.0:
+                return sparsity_to_k(length, b)
+            return max(1, min(int(length), int(b)))
+
+        lo, hi = resolve(self.k_min), resolve(self.k_max)
+        if lo > hi:
+            raise ValueError(
+                f"k bounds [{self.k_min}, {self.k_max}] resolve to "
+                f"[{lo}, {hi}] on a length-{length} leaf"
+            )
+        return lo, hi
+
+    def init(self, k0: int, k_min: int, k_max: int) -> ControllerState:
+        """Initial state: start at the static k, clipped into bounds.
+
+        >>> st = AdaptiveKController(budget=0.5).init(5, 1, 250)
+        >>> int(st.k), int(st.t)
+        (5, 0)
+        """
+        k = max(int(k_min), min(int(k_max), int(k0)))
+        return ControllerState(
+            err_ratio=jnp.zeros((), jnp.float32),
+            k=jnp.asarray(k, jnp.int32),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    # -- traced control law -----------------------------------------------
+    def plan_k(
+        self,
+        err_ratio: jax.Array,
+        k: jax.Array,
+        k_min: int,
+        k_max: int,
+    ) -> jax.Array:
+        """One multiplicative k update from the smoothed error ratio.
+
+        ``pressure = err_ratio / budget``; above the dead band k grows by
+        ``ceil(k * min(pressure, gain))``, below it shrinks by
+        ``floor(k * max(pressure, 1/gain))``, inside it k is kept — so the
+        planned k is monotone non-decreasing in pressure (equivalently:
+        non-increasing in the error-budget slack ``budget - err_ratio``),
+        and always lands in ``[k_min, k_max]``.
+
+        >>> c = AdaptiveKController(budget=0.1, hysteresis=0.25, gain=2.0)
+        >>> int(c.plan_k(jnp.asarray(0.4), jnp.asarray(16), 1, 256))
+        32
+        >>> int(c.plan_k(jnp.asarray(0.025), jnp.asarray(16), 1, 256))
+        8
+        >>> int(c.plan_k(jnp.asarray(0.11), jnp.asarray(16), 1, 256))
+        16
+        """
+        pressure = err_ratio / self.budget
+        scale = jnp.clip(pressure, 1.0 / self.gain, self.gain)
+        kf = k.astype(jnp.float32)
+        grown = jnp.ceil(kf * scale)
+        shrunk = jnp.floor(kf * scale)
+        kept = jnp.where(
+            pressure > 1.0 + self.hysteresis,
+            grown,
+            jnp.where(pressure < 1.0 - self.hysteresis, shrunk, kf),
+        )
+        return jnp.clip(kept, k_min, k_max).astype(jnp.int32)
+
+    def observe(
+        self,
+        state: ControllerState,
+        eps_norm: jax.Array,
+        g_norm: jax.Array,
+        *,
+        k_min: int,
+        k_max: int,
+    ) -> ControllerState:
+        """Fold one round's measured norms into the state; plan next k.
+
+        The raw ratio ``eps_norm / max(g_norm, tiny)`` is discounted with
+        ``momentum`` (the first observation seeds the estimate directly),
+        then :meth:`plan_k` turns it into the next round's k. Pure ``jnp``
+        — safe inside jit/scan with k as a dynamic operand.
+
+        >>> c = AdaptiveKController(budget=0.1, momentum=0.5)
+        >>> st = c.init(16, 1, 256)
+        >>> st = c.observe(st, jnp.asarray(4.0), jnp.asarray(10.0),
+        ...                k_min=1, k_max=256)
+        >>> round(float(st.err_ratio), 3), int(st.k)
+        (0.4, 32)
+        """
+        raw = eps_norm.astype(jnp.float32) / jnp.maximum(
+            g_norm.astype(jnp.float32), _TINY
+        )
+        smoothed = jnp.where(
+            state.t == 0,
+            raw,
+            self.momentum * state.err_ratio + (1.0 - self.momentum) * raw,
+        )
+        return ControllerState(
+            err_ratio=smoothed,
+            k=self.plan_k(smoothed, state.k, k_min, k_max),
+            t=state.t + 1,
+        )
+
+
+def round_wire_bits(codec: str, length: int, k: int) -> int:
+    """Bits one worker's payload puts on the wire at dynamic k.
+
+    The codec-agnostic pricing hook for budget sweeps and metrics: the
+    controller reasons purely about k, and every bytes question delegates
+    to ``Codec.wire_bits`` — swapping in a cheaper index encoding changes
+    the bits per coordinate here without touching the control law.
+
+    >>> round_wire_bits("coo_fp32", 1000, 10)
+    640
+    """
+    from repro.comm.codec import get_codec
+
+    return int(get_codec(codec).wire_bits(int(length), int(k)))
+
+
+def parse_adaptive_k(spec: str) -> AdaptiveKController:
+    """Parse the train CLI's ``--adaptive-k budget[,k_min,k_max]`` spec.
+
+    Bounds follow :class:`AdaptiveKController`'s convention: values in
+    (0, 1) are fractions of each leaf's length, values >= 1 absolute
+    coordinate counts.
+
+    >>> parse_adaptive_k("0.1").budget
+    0.1
+    >>> c = parse_adaptive_k("0.1,4,64")
+    >>> (c.k_min, c.k_max)
+    (4.0, 64.0)
+    """
+    parts = [p.strip() for p in spec.split(",") if p.strip()]
+    if len(parts) not in (1, 3):
+        raise ValueError(
+            f"expected 'budget' or 'budget,k_min,k_max', got {spec!r}"
+        )
+    try:
+        nums = [float(p) for p in parts]
+    except ValueError:
+        raise ValueError(
+            f"non-numeric --adaptive-k field in {spec!r}"
+        ) from None
+    if len(nums) == 1:
+        return AdaptiveKController(budget=nums[0])
+    return AdaptiveKController(
+        budget=nums[0], k_min=nums[1], k_max=nums[2]
+    )

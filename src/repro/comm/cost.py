@@ -5,7 +5,7 @@ Two views of every round, per (codec, collective, mesh):
 * ``predicted_bytes`` / ``predict`` — the analytic alpha–beta model
   (latency ``alpha`` per message + ``beta`` seconds/byte), computed from the
   codec's exact ``wire_bits`` accounting and the collective's communication
-  pattern. This generalizes the old ``aggregate.wire_words_per_worker``.
+  pattern.
 * ``measured_bytes`` — the same pattern costed with the *actual* encoded
   buffer sizes (``payload_nbytes`` over the payload pytree). Because all
   payload shapes are static, this is exact, and benchmarks assert
@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
@@ -489,32 +488,3 @@ def _parse_alpha_beta(ab: str) -> AlphaBeta:
             f"got {ab!r}"
         )
     return AlphaBeta(alpha=float(parts[0]), beta=float(parts[1]))
-
-
-def wire_words_per_worker(
-    mode: str, length: int, k: int, n_workers: int
-) -> int:
-    """Legacy analytic words/round (pre-``repro.comm`` interface).
-
-    .. deprecated:: PR 3
-        Use :func:`predicted_bytes` (ring-pattern bytes from the codec's
-        exact ``wire_bits``) or ``get_codec(...).wire_bits`` directly; the
-        migration recipe is in ``docs/comm.md``.
-
-    >>> import warnings
-    >>> with warnings.catch_warnings():
-    ...     warnings.simplefilter("ignore", DeprecationWarning)
-    ...     wire_words_per_worker("sparse_allgather", 1000, 10, 4)
-    80
-    """
-    warnings.warn(
-        "wire_words_per_worker is deprecated; use repro.comm.predicted_bytes"
-        " (or Codec.wire_bits) — see docs/comm.md for the migration",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    if mode == "dense_allreduce":
-        return length
-    if mode == "sparse_allgather":
-        return 2 * k * n_workers
-    raise ValueError(f"unknown aggregation {mode!r}")

@@ -5,11 +5,11 @@ from repro.core.aggregate import (
     allreduce_dense,
     dense_mean,
     scatter_add_payloads,
-    wire_words_per_worker,
 )
 from repro.core.selectors import (
     SELECTORS,
     exact_topk_mask,
+    exact_topk_mask_dynamic,
     fixed_k_payload,
     get_selector,
     mask_to_payload,
@@ -46,6 +46,7 @@ __all__ = [
     "allreduce_dense",
     "dense_mean",
     "exact_topk_mask",
+    "exact_topk_mask_dynamic",
     "fixed_k_payload",
     "get_selector",
     "make_sparsifier",
@@ -53,5 +54,4 @@ __all__ = [
     "scatter_add_payloads",
     "sparsity_to_k",
     "threshold_topk_mask",
-    "wire_words_per_worker",
 ]

@@ -15,7 +15,6 @@ from repro.comm.collectives import (
     dense_mean,
     scatter_add_payloads,
 )
-from repro.comm.cost import wire_words_per_worker
 
 AGGREGATIONS = tuple(sorted(COLLECTIVES))
 
@@ -25,5 +24,4 @@ __all__ = [
     "allreduce_dense",
     "dense_mean",
     "scatter_add_payloads",
-    "wire_words_per_worker",
 ]

@@ -48,17 +48,37 @@ def compact_init(length: int, k: int, dtype=jnp.float32) -> CompactState:
     )
 
 
+def _apply_k_dyn(a, vals, idx, k_dyn, capacity: int):
+    """Keep only the first ``k_dyn`` of the descending-sorted payload.
+
+    ``lax.top_k`` (and the bit-identical fused pipeline) returns values in
+    descending score order, so masking the tail selects exactly the
+    dynamic top-``k_dyn`` — the masked slots keep their real, distinct
+    indices with value 0, the same no-op-under-scatter-add convention the
+    static path uses for unfilled slots."""
+    keep = (jnp.arange(capacity) < k_dyn).astype(vals.dtype)
+    return a, vals * keep, idx
+
+
 def compact_select(
     cfg: SparsifierConfig,
     st: CompactState,
     g: jax.Array,
     k: int,
     *,
+    k_dyn: jax.Array | None = None,
     fastpath: str | None = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Select coordinates. Returns (a, vals [k], idx [k]).
 
     ``a`` is the accumulated gradient; (vals, idx) the fixed-k payload.
+
+    ``k_dyn`` (optional, *traced* int, ``<= k``) is the adaptive
+    controller's per-round k: selection still runs at the static capacity
+    ``k`` (payload shapes never change — no retrace), then payload values
+    beyond ``k_dyn`` are zeroed. Only the magnitude-scored kinds under the
+    ``"exact"`` selector support it; at ``k_dyn == k`` the result is
+    bit-for-bit the static path.
 
     ``fastpath`` routes fusable configs through the Pallas fused
     select→encode pipeline (:mod:`repro.comm.fastpath`): ``"on"``/
@@ -71,6 +91,14 @@ def compact_select(
     blessing, mirroring ``DistConfig.resolved_fastpath``.
     """
     L = g.shape[0]
+    if k_dyn is not None and (
+        cfg.kind not in ("topk", "regtopk") or cfg.selector != "exact"
+    ):
+        raise ValueError(
+            "dynamic per-round k needs a magnitude-scored fixed-k kind "
+            "('topk'/'regtopk') under selector='exact'; got kind="
+            f"{cfg.kind!r} selector={cfg.selector!r}"
+        )
     if fastpath not in (None, "off"):
         from repro.comm import fastpath as fp
 
@@ -91,7 +119,10 @@ def compact_select(
                 )
             )
         ):
-            return fp.fused_compact_select(cfg, st, g, k)
+            a, vals, idx = fp.fused_compact_select(cfg, st, g, k)
+            if k_dyn is None:
+                return a, vals, idx
+            return _apply_k_dyn(a, vals, idx, k_dyn, k)
     a = st.eps + g.astype(st.eps.dtype)
     if cfg.kind == "none":
         raise ValueError("'none' bypasses compact_select")
@@ -129,7 +160,10 @@ def compact_select(
         # unfilled slots keep their (distinct) top-k index but carry value
         # 0 — a no-op contribution on the wire, and no duplicate indices
         # for the scatter consumers downstream.
-        return a, a[idx] * (score[idx] > 0), idx
+        vals = a[idx] * (score[idx] > 0)
+        if k_dyn is None:
+            return a, vals, idx
+        return _apply_k_dyn(a, vals, idx, k_dyn, k)
     if cfg.selector == "threshold":
         mask = sel_lib.threshold_topk_mask(score, k)
         vals, idx = sel_lib.mask_to_payload(mask, a, k)

@@ -87,6 +87,13 @@ class DistConfig:
     # table prices faster, and resolves to "off" off-TPU where the kernels
     # run in interpret mode.
     fastpath: str = "off"
+    # error-budget-driven per-round k (comm.AdaptiveKController; train.py's
+    # --adaptive-k). None is the historical static-k path, bit-for-bit.
+    # When set, every leaf's payload capacity is its k_max bound, the
+    # controller's per-leaf k rides the round as a dynamic operand (no
+    # retrace), and make_sparsify_aggregate threads a per-leaf
+    # ControllerState tree alongside the sparsifier state.
+    adaptive_k: Optional[comm.AdaptiveKController] = None
 
     def resolved_collective(self) -> str:
         return self.collective or self.aggregation
@@ -130,6 +137,24 @@ class DistConfig:
         if self.link_topo is not None:
             return self.link_topo
         return self.link_model or comm.AlphaBeta()
+
+    def resolved_adaptive_k(self) -> Optional[comm.AdaptiveKController]:
+        """The active controller, with the config gates applied: adaptive
+        k drives the magnitude-scored fixed-k kinds under the exact
+        selector — anything else has no dynamic-k selection path."""
+        if self.adaptive_k is None:
+            return None
+        if self.sparsifier.kind not in ("topk", "regtopk"):
+            raise ValueError(
+                "adaptive_k drives magnitude-scored fixed-k kinds "
+                f"('topk'/'regtopk'); got {self.sparsifier.kind!r}"
+            )
+        if self.sparsifier.selector != "exact":
+            raise ValueError(
+                "adaptive_k requires selector='exact' (the capacity-"
+                f"bounded lax.top_k path); got {self.sparsifier.selector!r}"
+            )
+        return self.adaptive_k
 
 
 class LeafPlan(NamedTuple):
@@ -246,10 +271,14 @@ def build_plan(params_shape, specs, mesh, sparsity: float,
         # an explicitly-fixed lossy codec is the user's call.
         allow_lossy = dist.codec != "auto"
 
+    ctrl = None if dist is None else dist.resolved_adaptive_k()
+
     def mk(leaf, spec):
         ls = _local_shape(leaf.shape, spec, mesh)
         ll = int(np.prod(ls)) if ls else 1
-        k = sparsity_to_k(ll, sparsity)
+        # adaptive leaves allocate (and get planned at) the controller's
+        # k_max bound — the static payload capacity the rounds ship.
+        k = sparsity_to_k(ll, sparsity) if ctrl is None else ctrl.bounds(ll)[1]
         if not auto:
             fused = None
             if fp_mode != "off":
@@ -271,6 +300,25 @@ def build_plan(params_shape, specs, mesh, sparsity: float,
         )
 
     return jax.tree.map(mk, params_shape, specs)
+
+
+def apply_plan_decisions(plan, comm_plan):
+    """Graft a :class:`repro.comm.autotune.CommPlan`'s per-leaf (codec,
+    collective, fused) decisions onto a ``LeafPlan`` tree — the bridge
+    from ``comm.replan`` (measured-sample re-planning at runtime) back to
+    the static plan ``make_sparsify_aggregate`` consumes. Capacities
+    (``k``) are untouched, so sparsifier/controller state shapes survive
+    the swap and training resumes without reinitialization. Accepts the
+    ``CommPlan`` itself or its ``decisions`` tree."""
+    decisions = getattr(comm_plan, "decisions", comm_plan)
+    return jax.tree.map(
+        lambda p, d: p._replace(
+            codec=d.codec, collective=d.collective, fused=d.fused
+        ),
+        plan,
+        decisions,
+        is_leaf=_is_plan,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -319,10 +367,66 @@ def init_sparsifier_state(plan, W: int, mesh, dp_axes, dtype, shardings=None):
 
 
 # ---------------------------------------------------------------------------
+# adaptive-k controller state (per-leaf scalars, replicated)
+# ---------------------------------------------------------------------------
+def controller_state_specs(plan):
+    """PartitionSpec tree for the per-leaf ``ControllerState`` scalars —
+    replicated everywhere (each shard derives the identical update from
+    psum'd norms, so replication is self-consistent)."""
+    return jax.tree.map(
+        lambda p: comm.ControllerState(P(), P(), P()), plan, is_leaf=_is_plan
+    )
+
+
+def init_controller_state(plan, dist: DistConfig):
+    """(ControllerState tree mirroring ``plan``, PartitionSpec tree).
+
+    Each leaf starts at the static-sparsity k clipped into the
+    controller's per-leaf bounds; the plan must have been built with
+    ``dist`` so leaf capacities already sit at ``k_max``."""
+    ctrl = dist.resolved_adaptive_k()
+    if ctrl is None:
+        raise ValueError("init_controller_state needs dist.adaptive_k")
+
+    def mk(p: LeafPlan):
+        lo, hi = ctrl.bounds(p.local_len)
+        return ctrl.init(
+            sparsity_to_k(p.local_len, dist.sparsifier.sparsity), lo, hi
+        )
+
+    return (
+        jax.tree.map(mk, plan, is_leaf=_is_plan),
+        controller_state_specs(plan),
+    )
+
+
+def _ctrl_update(ctrl_cfg, ctrl_leaf, new_st, agg, p: LeafPlan, dp_axes,
+                 model_axes, lo: int, hi: int):
+    """Fold one leaf's round into its controller state (inside shard_map).
+
+    Norms are assembled from the local shards: sum-of-squares psum'd over
+    the non-dp (model) axes, then the per-worker eps norms pmean'd over
+    dp. A leaf *replicated* over a model axis double-counts by the axis
+    size — identically for eps and g_agg, so the ratio the budget
+    regulates is unaffected."""
+    eps = new_st.eps[0].reshape(p.local_len).astype(jnp.float32)
+    eps_sq = jnp.sum(eps * eps)
+    ag = agg.reshape(p.local_len).astype(jnp.float32)
+    g_sq = jnp.sum(ag * ag)
+    if model_axes:
+        eps_sq = jax.lax.psum(eps_sq, model_axes)
+        g_sq = jax.lax.psum(g_sq, model_axes)
+    eps_norm = jax.lax.pmean(jnp.sqrt(eps_sq), dp_axes)
+    return ctrl_cfg.observe(
+        ctrl_leaf, eps_norm, jnp.sqrt(g_sq), k_min=lo, k_max=hi
+    )
+
+
+# ---------------------------------------------------------------------------
 # the sparsify+aggregate shard_map stage
 # ---------------------------------------------------------------------------
 def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
-              part_ctx=None, fused=False):
+              part_ctx=None, fused=False, k_dyn=None):
     """Local (worker x model-shard) view: g [1, *local], st with leading
     [1(,1)] axes. Returns (agg local shard [*local], new state).
 
@@ -347,6 +451,10 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
     (``sent_*``) frozen at the last round the server actually saw it —
     error feedback covers non-participation exactly like sparsification.
     ``part_ctx=None`` is the historical full round, bit-for-bit.
+
+    ``k_dyn`` (traced int, adaptive-k rounds only) caps the effective
+    payload cardinality below the static capacity ``p.k`` — see
+    ``compact_select``; ``None`` is the historical static-k selection.
     """
     gl = g[0].reshape(p.local_len)
     stl = C.CompactState(
@@ -371,7 +479,8 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
         new = stl._replace(t=stl.t + 1)
     else:
         a, vals, idx = C.compact_select(
-            scfg, stl, gl, p.k, fastpath="on" if fused else None
+            scfg, stl, gl, p.k, k_dyn=k_dyn,
+            fastpath="on" if fused else None,
         )
         omega = scfg.omega if part_ctx is None else w_part
         shard_mask = None if part_ctx is None else m
@@ -469,7 +578,20 @@ def make_sparsify_aggregate(
                 f"({cname}, {sname}) pair is not fusable: {why}"
             )
 
-    def body(grads, state):
+    ctrl_cfg = dist.resolved_adaptive_k()
+    if ctrl_cfg is not None:
+        model_axes = tuple(a for a in mesh.axis_names if a not in dp)
+        leaf_bounds = [ctrl_cfg.bounds(p.local_len) for p in plan_flat]
+        for p, (_, hi) in zip(plan_flat, leaf_bounds, strict=True):
+            if p.k != hi:
+                raise ValueError(
+                    f"adaptive-k plan capacity mismatch: a {p.local_len}-"
+                    f"element leaf carries k={p.k} but the controller's "
+                    f"k_max bound is {hi} — build the plan with "
+                    "build_plan(..., dist=dist) so capacities sit at k_max"
+                )
+
+    def rounds(grads, state, ctrl=None):
         g_flat = plan_def.flatten_up_to(grads)
         s_flat = plan_def.flatten_up_to(state)
         part_ctx = None
@@ -481,22 +603,49 @@ def make_sparsify_aggregate(
             pmask = part.round_mask(s_flat[0].t[0], n_workers)
             m = pmask[comm.worker_index(dp, dp_sizes)]
             part_ctx = (m, 1.0 / jnp.maximum(pmask.sum(), 1.0))
+        c_flat = (
+            plan_def.flatten_up_to(ctrl) if ctrl is not None
+            else [None] * len(plan_flat)
+        )
         outs = [
-            _spa_leaf(g, s, p, scfg, codec, sname, dp, part_ctx, fval)
-            for g, s, p, codec, (_, sname), fval in zip(
-                g_flat, s_flat, plan_flat, leaf_codecs, wires, fused_flags, strict=True
+            _spa_leaf(
+                g, s, p, scfg, codec, sname, dp, part_ctx, fval,
+                k_dyn=None if c is None else c.k,
+            )
+            for g, s, p, codec, (_, sname), fval, c in zip(
+                g_flat, s_flat, plan_flat, leaf_codecs, wires, fused_flags,
+                c_flat, strict=True
             )
         ]
         agg = jax.tree.unflatten(plan_def, [o[0] for o in outs])
         new_state = jax.tree.unflatten(plan_def, [o[1] for o in outs])
-        return agg, new_state
+        if ctrl is None:
+            return agg, new_state
+        new_ctrl = jax.tree.unflatten(plan_def, [
+            _ctrl_update(
+                ctrl_cfg, c, o[1], o[0], p, dp, model_axes, lo, hi
+            )
+            for o, c, p, (lo, hi) in zip(
+                outs, c_flat, plan_flat, leaf_bounds, strict=True
+            )
+        ])
+        return agg, new_state, new_ctrl
 
     grads_in_specs = jax.tree.map(lambda s: P(dp_spec, *tuple(s)), param_specs)
+    if ctrl_cfg is None:
+        return shard_map(
+            lambda grads, state: rounds(grads, state),
+            mesh=mesh,
+            in_specs=(grads_in_specs, state_specs),
+            out_specs=(param_specs, state_specs),
+            check_vma=False,
+        )
+    ctrl_specs = controller_state_specs(plan)
     return shard_map(
-        body,
+        rounds,
         mesh=mesh,
-        in_specs=(grads_in_specs, state_specs),
-        out_specs=(param_specs, state_specs),
+        in_specs=(grads_in_specs, state_specs, ctrl_specs),
+        out_specs=(param_specs, state_specs, ctrl_specs),
         check_vma=False,
     )
 
@@ -616,8 +765,14 @@ def make_train_step(
     state_specs,
 ):
     """train_step(params, opt_state, sp_state, batch) ->
-    (params, opt_state, sp_state, metrics)"""
+    (params, opt_state, sp_state, metrics)
+
+    With ``dist.adaptive_k`` set, ``sp_state`` is the *pair*
+    ``(compact_state_tree, controller_state_tree)`` (see
+    :func:`init_controller_state`) and metrics gain ``"adaptive_k"``, the
+    mean effective per-leaf k the round just used."""
     opt = make_optimizer(dist.optimizer)
+    adaptive = dist.resolved_adaptive_k() is not None
     W = int(np.prod([mesh.shape[a] for a in dist.dp_axes]))
     spa = make_sparsify_aggregate(
         mesh, plan, param_specs, state_specs, dist, W
@@ -671,13 +826,29 @@ def make_train_step(
         grads_w = jax.tree.map(
             lambda g: g.astype(_DT[dist.state_dtype]), grads_w
         )
-        agg, new_sp = spa(grads_w, sp_state)
+        if adaptive:
+            cp_state, ctrl_state = sp_state
+            agg, new_cp, new_ctrl = spa(grads_w, cp_state, ctrl_state)
+            new_sp = (new_cp, new_ctrl)
+        else:
+            agg, new_sp = spa(grads_w, sp_state)
         new_params, new_opt = opt.update(agg, opt_state, params)
         metrics = {
             "loss": losses.mean(),
             "comm_bytes": jnp.asarray(wire_meas, jnp.float32),
             "comm_bytes_predicted": jnp.asarray(wire_pred, jnp.float32),
         }
+        if adaptive:
+            # the k each leaf *used* this round (ctrl carries next round's)
+            ks = [
+                c.k for c in jax.tree.leaves(
+                    ctrl_state,
+                    is_leaf=lambda x: isinstance(x, comm.ControllerState),
+                )
+            ]
+            metrics["adaptive_k"] = (
+                jnp.stack([jnp.asarray(k, jnp.float32) for k in ks]).mean()
+            )
         return new_params, new_opt, new_sp, metrics
 
     return train_step

@@ -49,6 +49,36 @@ def exact_topk_mask(score: jax.Array, k: int) -> jax.Array:
     return mask * (score > 0)
 
 
+def exact_topk_mask_dynamic(
+    score: jax.Array, k: jax.Array, capacity: int
+) -> jax.Array:
+    """Exact top-k mask with a *traced* k under a static ``capacity``.
+
+    The adaptive controller varies k per round inside one compiled step;
+    XLA needs static shapes, so selection runs ``lax.top_k`` at the static
+    upper bound ``capacity`` (the controller's ``k_max``) and the mask
+    keeps only the first ``k`` (dynamic, ``k <= capacity``) of the
+    descending-sorted winners. At ``k == capacity`` this is bit-for-bit
+    :func:`exact_topk_mask` (same ``lax.top_k``, same zero-score
+    exclusion) — the off-switch equivalence the differential tests pin.
+
+    >>> import jax.numpy as jnp
+    >>> s = jnp.array([0.1, 3.0, 0.2, 2.0])
+    >>> exact_topk_mask_dynamic(s, jnp.asarray(1), 3).tolist()
+    [0.0, 1.0, 0.0, 0.0]
+    >>> exact_topk_mask_dynamic(s, jnp.asarray(3), 3).tolist()
+    [0.0, 1.0, 1.0, 1.0]
+    """
+    if score.ndim != 1:
+        raise ValueError(f"score must be 1-D, got {score.shape}")
+    capacity = int(min(capacity, score.shape[0]))
+    if capacity <= 0:
+        return jnp.zeros_like(score)
+    vals, idx = jax.lax.top_k(score, capacity)
+    keep = (jnp.arange(capacity) < k) & (vals > 0)
+    return jnp.zeros_like(score).at[idx].set(keep.astype(score.dtype))
+
+
 def threshold_topk_mask(
     score: jax.Array, k: int, *, n_iters: int = 24
 ) -> jax.Array:

@@ -41,6 +41,10 @@ class SimState(NamedTuple):
     # rounds-to-delivery countdown (0 = empty slot).
     pending: Optional[jax.Array] = None  # [N, J]
     pending_age: Optional[jax.Array] = None  # [N] int32
+    # adaptive-k controller state (comm.ControllerState; None when the
+    # controller is disabled — the static-k path is then bit-for-bit
+    # unchanged, exactly like the pending fields above).
+    ctrl: Optional[comm.ControllerState] = None
 
 
 @dataclasses.dataclass
@@ -77,6 +81,12 @@ class DistributedSim:
     # the compact state layout and lives in the shard_map runtime
     # (DistConfig.fastpath). "auto" resolves to "off" off-TPU.
     fastpath: str = "off"
+    # error-budget-driven per-round k (comm.AdaptiveKController); None is
+    # the historical static-k path, bit-for-bit. When set, selection runs
+    # at the static capacity k_max with the controller's k as a dynamic
+    # operand (no retrace), and each round folds the measured
+    # ||eps|| / ||g_agg|| ratio back into the controller state.
+    adaptive_k: Optional[comm.AdaptiveKController] = None
 
     def __post_init__(self):
         if self.fastpath not in comm.FASTPATH_MODES:
@@ -86,6 +96,23 @@ class DistributedSim:
             )
         if self.participation is not None:
             self.participation.validate(self.n_workers)
+        # adaptive-k: resolve the static [k_min, k_max] bounds once (k_max
+        # is the payload capacity the traced step allocates).
+        self._k_bounds: Optional[Tuple[int, int]] = None
+        if self.adaptive_k is not None:
+            if self.sparsifier_cfg.kind not in ("topk", "regtopk"):
+                raise ValueError(
+                    "adaptive_k drives magnitude-scored fixed-k kinds "
+                    "('topk'/'regtopk'); got "
+                    f"{self.sparsifier_cfg.kind!r}"
+                )
+            if self.sparsifier_cfg.selector != "exact":
+                raise ValueError(
+                    "adaptive_k requires selector='exact' (the capacity-"
+                    "bounded lax.top_k path); got "
+                    f"{self.sparsifier_cfg.selector!r}"
+                )
+            self._k_bounds = self.adaptive_k.bounds(self.length)
         # uniform server weights omega_n = 1/N (paper's arithmetic mean);
         # keep the sparsifier's omega consistent with the aggregation. A
         # partial schedule aggregates participants with the renormalized
@@ -144,7 +171,13 @@ class DistributedSim:
                 )
             d = autotune.choose_leaf(
                 self.length,
-                sel_lib.sparsity_to_k(self.length, cfg.sparsity),
+                # adaptive runs price the wire at capacity (k_max) — the
+                # payload shape the round actually ships.
+                (
+                    self._k_bounds[1]
+                    if self._k_bounds is not None
+                    else sel_lib.sparsity_to_k(self.length, cfg.sparsity)
+                ),
                 self._dp_sizes,
                 self.resolved_link_model,
                 codecs=codecs,
@@ -211,6 +244,16 @@ class DistributedSim:
             pending_age=(
                 jnp.zeros((self.n_workers,), jnp.int32) if stale else None
             ),
+            ctrl=(
+                self.adaptive_k.init(
+                    sel_lib.sparsity_to_k(
+                        self.length, self.sparsifier.cfg.sparsity
+                    ),
+                    *self._k_bounds,
+                )
+                if self.adaptive_k is not None
+                else None
+            ),
         )
 
     def step_fn(self, state: SimState) -> Tuple[SimState, jax.Array]:
@@ -230,9 +273,19 @@ class DistributedSim:
         widx = jnp.arange(self.n_workers)
         grads = jax.vmap(self.grad_fn, in_axes=(None, 0))(state.theta, widx)
 
-        ghat, mask, new_ws = jax.vmap(
-            self.sparsifier.step, in_axes=(0, 0, None)
-        )(state.worker_states, grads, state.g_agg_prev)
+        if self.adaptive_k is None:
+            ghat, mask, new_ws = jax.vmap(
+                self.sparsifier.step, in_axes=(0, 0, None)
+            )(state.worker_states, grads, state.g_agg_prev)
+        else:
+            # the round sends the k the controller planned *last* round —
+            # a dynamic operand of the compiled step (capacity is static).
+            k_dyn, cap = state.ctrl.k, self._k_bounds[1]
+            ghat, mask, new_ws = jax.vmap(
+                lambda s, g: self.sparsifier.step_dyn(
+                    s, g, state.g_agg_prev, k_dyn, cap
+                )
+            )(state.worker_states, grads)
         # sparsifier invariant (tested): eps' + ghat == accumulated a —
         # recoverable here before any codec error feedback touches eps.
         a_stack = new_ws.eps + ghat
@@ -261,7 +314,11 @@ class DistributedSim:
             sent_stack = ghat
         else:
             codec, L = self._codec, self.length
-            k = sel_lib.sparsity_to_k(L, self.sparsifier.cfg.sparsity)
+            k = (
+                self._k_bounds[1]
+                if self._k_bounds is not None
+                else sel_lib.sparsity_to_k(L, self.sparsifier.cfg.sparsity)
+            )
             vals, idx = jax.vmap(
                 lambda m, a: sel_lib.mask_to_payload(m, a, k)
             )(mask, ghat)
@@ -347,6 +404,20 @@ class DistributedSim:
                 jnp.where(deliver, 0, jnp.maximum(pending_age - 1, 0)),
             ).astype(jnp.int32)
 
+        ctrl = state.ctrl
+        if self.adaptive_k is not None:
+            # posterior error statistics of the finished round: mean
+            # per-worker ||eps|| (codec residual included) against the
+            # broadcast ||g_agg|| (late deliveries included).
+            eps_norm = jnp.linalg.norm(
+                new_ws.eps.astype(jnp.float32), axis=-1
+            ).mean()
+            g_norm = jnp.linalg.norm(g_agg.astype(jnp.float32))
+            lo, hi = self._k_bounds
+            ctrl = self.adaptive_k.observe(
+                ctrl, eps_norm, g_norm, k_min=lo, k_max=hi
+            )
+
         theta = state.theta - self.learning_rate * g_agg
         new_state = SimState(
             theta=theta,
@@ -355,6 +426,7 @@ class DistributedSim:
             step=state.step + 1,
             pending=pending,
             pending_age=pending_age,
+            ctrl=ctrl,
         )
         return new_state, g_agg
 
@@ -363,8 +435,17 @@ class DistributedSim:
     ) -> comm.CostEstimate:
         """Per-worker alpha–beta cost of one round at this sim's settings,
         over the sim's (possibly multi-axis) notional dp mesh. ``model``
-        defaults to the sim's own resolved link model/topology."""
-        k = sel_lib.sparsity_to_k(self.length, self.sparsifier.cfg.sparsity)
+        defaults to the sim's own resolved link model/topology. Adaptive
+        runs price the static payload capacity (k_max) — the fixed-shape
+        buffer the round ships; per-round *effective* bits at the
+        controller's k are ``comm.round_wire_bits(codec, L, k)``."""
+        k = (
+            self._k_bounds[1]
+            if self._k_bounds is not None
+            else sel_lib.sparsity_to_k(
+                self.length, self.sparsifier.cfg.sparsity
+            )
+        )
         return comm.predict(
             self._codec,
             self.resolved_collective,
@@ -380,13 +461,26 @@ class DistributedSim:
         theta0: jax.Array,
         n_steps: int,
         trace_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+        trace_state_fn: Optional[Callable[[SimState], object]] = None,
     ):
-        """jit-scanned rollout; returns (final_state, trace [n_steps, ...])."""
+        """jit-scanned rollout; returns (final_state, trace [n_steps, ...]).
+
+        ``trace_fn`` maps each round's theta to a trace row (default: theta
+        itself). ``trace_state_fn`` instead receives the whole new
+        :class:`SimState` — the adaptive benchmarks use it to trace the
+        per-round k (``state.ctrl.k``) alongside convergence; it wins when
+        both are given."""
         step = self.step_fn
 
         def body(state, _):
             new_state, _g = step(state)
-            out = trace_fn(new_state.theta) if trace_fn else new_state.theta
+            if trace_state_fn is not None:
+                out = trace_state_fn(new_state)
+            else:
+                out = (
+                    trace_fn(new_state.theta) if trace_fn
+                    else new_state.theta
+                )
             return new_state, out
 
         init = self.init(theta0)

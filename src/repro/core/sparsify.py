@@ -106,6 +106,23 @@ class Sparsifier:
         """Returns (ghat_dense, mask, new_state)."""
         raise NotImplementedError
 
+    def step_dyn(
+        self,
+        state: SparsifierState,
+        g_local: jax.Array,
+        g_agg_prev: jax.Array,
+        k: jax.Array,
+        capacity: int,
+    ) -> Tuple[jax.Array, jax.Array, SparsifierState]:
+        """``step`` with a *traced* per-round k under a static ``capacity``
+        (the adaptive controller's path — see
+        ``selectors.exact_topk_mask_dynamic``). Only the magnitude-scored
+        fixed-k kinds support it."""
+        raise NotImplementedError(
+            f"sparsifier kind {self.cfg.kind!r} does not support a "
+            "dynamic per-round k (adaptive_k drives 'topk'/'regtopk')"
+        )
+
     # -- shared helpers ----------------------------------------------------
     def _k(self, length: int) -> int:
         return sel_lib.sparsity_to_k(length, self.cfg.sparsity)
@@ -113,6 +130,17 @@ class Sparsifier:
     def _select(self, score: jax.Array) -> jax.Array:
         select = sel_lib.get_selector(self.cfg.selector)
         return select(score, self._k(score.shape[0]))
+
+    def _select_dyn(
+        self, score: jax.Array, k: jax.Array, capacity: int
+    ) -> jax.Array:
+        if self.cfg.selector != "exact":
+            raise ValueError(
+                "dynamic per-round k requires selector='exact' (the "
+                "capacity-bounded lax.top_k path); got "
+                f"{self.cfg.selector!r}"
+            )
+        return sel_lib.exact_topk_mask_dynamic(score, k, capacity)
 
     def _finish(
         self, state: SparsifierState, a: jax.Array, mask: jax.Array
@@ -138,6 +166,11 @@ class TopK(Sparsifier):
     def step(self, state, g_local, g_agg_prev):
         a = state.eps + g_local
         mask = self._select(jnp.abs(a))
+        return self._finish(state, a, mask)
+
+    def step_dyn(self, state, g_local, g_agg_prev, k, capacity):
+        a = state.eps + g_local
+        mask = self._select_dyn(jnp.abs(a), k, capacity)
         return self._finish(state, a, mask)
 
 
@@ -174,6 +207,14 @@ class RegTopK(Sparsifier):
             state.t == 0, jnp.abs(a), self._score(state, a, g_agg_prev)
         )
         mask = self._select(score)
+        return self._finish(state, a, mask)
+
+    def step_dyn(self, state, g_local, g_agg_prev, k, capacity):
+        a = state.eps + g_local
+        score = jnp.where(
+            state.t == 0, jnp.abs(a), self._score(state, a, g_agg_prev)
+        )
+        mask = self._select_dyn(score, k, capacity)
         return self._finish(state, a, mask)
 
 

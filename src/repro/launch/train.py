@@ -31,6 +31,76 @@ from repro.models import get_family
 from repro.optim import OptConfig, make_optimizer
 
 
+def _replan(dist, mesh, dp_axes, plan, step_fn, sp_state, mod, cfg, asm, t):
+    """Mid-training re-plan (--replan-every): probe the live collectives,
+    fit a fresh alpha-beta model from the measured samples, re-run the
+    per-leaf (codec x collective) planning at the k actually being sent,
+    and rebuild the jitted step on the regrafted plan. Capacities (and so
+    every state shape) are untouched — training resumes in place."""
+    from collections import Counter
+
+    from repro import comm
+    from repro.comm import calibrate as cal
+    from repro.core.distributed import (
+        apply_plan_decisions,
+        leaf_wire,
+        make_train_step,
+    )
+
+    res = cal.calibrate(mesh=mesh, dp_axes=dp_axes)
+    if not res.calibrated:
+        print(
+            f"replan @step {t + 1}: skipped (no dp axis with >1 worker)",
+            flush=True,
+        )
+        return plan, step_fn
+    W = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    part = dist.resolved_participation()
+    k_over = None
+    if dist.resolved_adaptive_k() is not None:
+        k_over = jax.tree.map(
+            lambda c: int(c.k),
+            sp_state[1],
+            is_leaf=lambda x: isinstance(x, comm.ControllerState),
+        )
+    cp = comm.replan(
+        plan,
+        [mesh.shape[a] for a in dp_axes],
+        res.samples,
+        k_overrides=k_over,
+        codecs=None if dist.codec == "auto" else [dist.codec],
+        collectives=(
+            None if dist.resolved_collective() == "auto"
+            else [dist.resolved_collective()]
+        ),
+        allow_lossy=dist.codec != "auto",
+        participants=(
+            part.expected_participants(W) if part is not None else None
+        ),
+        fastpath=dist.resolved_fastpath(),
+    )
+    new_plan = apply_plan_decisions(plan, cp)
+    lk = cp.model.links[0]
+    print(
+        f"replan @step {t + 1}: alpha={lk.alpha:.3e} s/msg "
+        f"beta={lk.beta:.3e} s/B -> "
+        f"{cp.total_seconds * 1e3:.3f} ms/round predicted",
+        flush=True,
+    )
+    picks = Counter(
+        leaf_wire(p, dist)
+        for p in jax.tree.leaves(
+            new_plan, is_leaf=lambda x: hasattr(x, "local_len")
+        )
+    )
+    for (c, s), n in sorted(picks.items()):
+        print(f"replan:   {c}/{s}: {n} leaves", flush=True)
+    step = jax.jit(make_train_step(
+        mod, cfg, dist, mesh, asm.param_specs, new_plan, asm.state_specs
+    ))
+    return new_plan, step
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-resnet-proxy")
@@ -77,6 +147,19 @@ def main():
                          "the round aggregates with renormalized weights "
                          "('stale:...' bounded-staleness delivery is "
                          "simulator-only)")
+    ap.add_argument("--adaptive-k", default=None, metavar="SPEC",
+                    help="error-budget-driven per-round k: "
+                         "'budget[,k_min,k_max]' — the controller grows/"
+                         "shrinks each leaf's k to hold "
+                         "||eps||/||g_agg|| at the budget; bounds in "
+                         "(0,1) are fractions of the leaf length, >= 1 "
+                         "absolute counts; payloads ride at the k_max "
+                         "capacity so k changes never retrace")
+    ap.add_argument("--replan-every", type=int, default=0, metavar="N",
+                    help="every N steps, re-fit the alpha-beta link model "
+                         "from live collective probes and re-plan the "
+                         "per-leaf codec/collective choices from the "
+                         "measured samples (0 disables)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default="host", choices=["host", "production"])
@@ -164,6 +247,19 @@ def main():
                 flush=True,
             )
 
+    adaptive_k = None
+    if args.adaptive_k:
+        from repro import comm
+
+        adaptive_k = comm.parse_adaptive_k(args.adaptive_k)
+        print(
+            f"adaptive-k: budget={adaptive_k.budget:g} "
+            f"bounds=[{adaptive_k.k_min:g}, {adaptive_k.k_max:g}] "
+            f"momentum={adaptive_k.momentum:g} "
+            f"hysteresis={adaptive_k.hysteresis:g}",
+            flush=True,
+        )
+
     dist = DistConfig(
         sparsifier=SparsifierConfig(
             kind=args.sparsifier, sparsity=args.sparsity, mu=args.mu
@@ -178,6 +274,7 @@ def main():
         link_topo=link_topo,
         participation=participation,
         fastpath=args.fastpath,
+        adaptive_k=adaptive_k,
     )
     if args.fastpath != "off":
         print(
@@ -194,6 +291,11 @@ def main():
     sp_state, _ = init_sparsifier_state(
         asm.plan, W, mesh, dp_axes, jnp.float32
     )
+    if adaptive_k is not None:
+        from repro.core.distributed import init_controller_state
+
+        ctrl0, _ = init_controller_state(asm.plan, dist)
+        sp_state = (sp_state, ctrl0)
     start = 0
     if args.resume:
         params = restore(args.resume + "/params", params)
@@ -239,6 +341,7 @@ def main():
             f"comm:   fastpath: {n_fused}/{len(leaves)} leaves fused",
             flush=True,
         )
+    plan = asm.plan
     t0 = time.time()
     with mesh:
         for t in range(start, start + args.steps):
@@ -247,10 +350,24 @@ def main():
             )
             if t % args.log_every == 0 or t == start + args.steps - 1:
                 dt = time.time() - t0
+                extra = (
+                    f" k {float(m['adaptive_k']):7.1f}"
+                    if "adaptive_k" in m else ""
+                )
                 print(
-                    f"step {t:5d} loss {float(m['loss']):.4f} "
+                    f"step {t:5d} loss {float(m['loss']):.4f}{extra} "
                     f"({dt / max(1, t - start + 1):.2f}s/step)",
                     flush=True,
+                )
+            is_last = t == start + args.steps - 1
+            if (
+                args.replan_every
+                and not is_last
+                and (t - start + 1) % args.replan_every == 0
+            ):
+                plan, step_fn = _replan(
+                    dist, mesh, dp_axes, plan, step_fn, sp_state,
+                    mod, cfg, asm, t,
                 )
     if args.checkpoint:
         save(args.checkpoint + "/params", params,

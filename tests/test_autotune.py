@@ -717,3 +717,71 @@ def test_throughput_table_measure_fits_positive_rates():
     assert 0 < t.unfused_bps < float("inf")
     # rates feed straight into the auto pricing
     assert isinstance(t.prefers_fused(8192, 8), bool)
+
+
+# ---------------------------------------------------------------------------
+# __post_init__ auto-planning x participation (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+def _capture_choose_leaf(monkeypatch):
+    """Spy on autotune.choose_leaf, recording (k, participants) per call."""
+    from repro.comm import autotune as at
+
+    captured = []
+    real = at.choose_leaf
+
+    def spy(length, k, dp_sizes, link, **kw):
+        captured.append((int(k), kw.get("participants")))
+        return real(length, k, dp_sizes, link, **kw)
+
+    monkeypatch.setattr(at, "choose_leaf", spy)
+    return captured
+
+
+@pytest.mark.parametrize(
+    "part",
+    [
+        None,
+        comm.Participation("full"),
+        comm.Participation("bernoulli", drop_rate=0.0),
+        comm.Participation("bernoulli", drop_rate=0.25, seed=1),
+        comm.Participation("round_robin", n_stragglers=3),
+        comm.Participation(
+            "stale", n_stragglers=2, staleness=2, discount=0.5
+        ),
+    ],
+    ids=["none", "full", "bern0", "bernoulli", "round_robin", "stale"],
+)
+def test_sim_auto_planning_threads_expected_participants(monkeypatch, part):
+    """``DistributedSim.__post_init__`` auto-planning must price partial
+    rounds: the schedule's ``expected_participants(N)`` travels into
+    ``autotune.choose_leaf(participants=)`` verbatim, and the full /
+    disabled / zero-drop schedules plan at ``participants=None`` (the
+    dense-round cost, bit-identical to no participation at all)."""
+    captured = _capture_choose_leaf(monkeypatch)
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.25, mu=1.0)
+    DistributedSim(
+        lambda th, n: th, 8, 16, cfg,
+        codec="auto", collective="auto", participation=part,
+    )
+    assert len(captured) == 1
+    _, got = captured[0]
+    if part is None or part.is_full:
+        assert got is None
+    else:
+        assert got == part.expected_participants(8)
+
+
+def test_sim_auto_planning_adaptive_prices_capacity(monkeypatch):
+    """With an adaptive controller the planner prices the payload the
+    round actually ships — capacity ``k_max`` — not the static-sparsity
+    k, and participation still rides along."""
+    captured = _capture_choose_leaf(monkeypatch)
+    cfg = SparsifierConfig(kind="regtopk", sparsity=0.05, mu=1.0)
+    ctrl = comm.AdaptiveKController(budget=1.0, k_min=2, k_max=32)
+    part = comm.Participation("round_robin", n_stragglers=2)
+    DistributedSim(
+        lambda th, n: th, 8, 64, cfg,
+        codec="auto", collective="auto",
+        participation=part, adaptive_k=ctrl,
+    )
+    assert captured == [(32, 6.0)]

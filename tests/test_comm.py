@@ -424,17 +424,17 @@ def test_sparse_beats_dense_at_low_sparsity():
     assert sparse < dense
 
 
-def test_legacy_wire_words_shim():
-    from repro.core import wire_words_per_worker
-
-    # legacy interface still answers, but flags itself (migration:
-    # docs/comm.md); new code uses predicted_bytes / Codec.wire_bits.
-    with pytest.warns(DeprecationWarning, match="predicted_bytes"):
-        assert wire_words_per_worker("dense_allreduce", 1000, 10, 4) == 1000
-    with pytest.warns(DeprecationWarning):
-        assert wire_words_per_worker("sparse_allgather", 1000, 10, 4) == 80
-    with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
-        wire_words_per_worker("bogus", 1, 1, 1)
+def test_wire_words_from_codec_wire_bits():
+    # the removed ``cost.wire_words_per_worker`` shim's word counts fall
+    # straight out of ``Codec.wire_bits`` (migration recipe: docs/comm.md)
+    # — dense ships L f32 words, the fp32-COO allgather 2*k words/worker.
+    L, k, N = 1000, 10, 4
+    assert comm.get_codec("coo_fp32").wire_bits(L, k) * N // 32 == 80
+    dense_words = L  # the dense vector itself, one f32 word per coord
+    assert dense_words == 1000
+    # and the shim's ValueError on unknown modes lives on in the registry
+    with pytest.raises(ValueError, match="codec"):
+        comm.get_codec("bogus")
 
 
 # ---------------------------------------------------------------------------

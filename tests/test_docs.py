@@ -59,6 +59,7 @@ COMM_MODULES = [
     "repro.comm.autotune",
     "repro.comm.calibrate",
     "repro.comm.participation",
+    "repro.comm.controller",
 ]
 
 

@@ -2,9 +2,9 @@
 """Refresh the committed perf baselines in `benchmarks/baselines/`.
 
 Runs the JSON-emitting benches (`benchmarks/kernel_bench.py`,
-`benchmarks/comm_bench.py`) in-process and rewrites
-``benchmarks/baselines/BENCH_kernels.json`` /
-``benchmarks/baselines/BENCH_comm.json`` — the files the CI ``perf`` job
+`benchmarks/comm_bench.py`, `benchmarks/adaptive_bench.py`) in-process and
+rewrites ``benchmarks/baselines/BENCH_kernels.json`` /
+``BENCH_comm.json`` / ``BENCH_adaptive.json`` — the files the CI ``perf`` job
 gates new runs against via `tools/check_perf.py`. Timings are stored
 alongside the run's calibration constant, so baselines recorded on one
 machine remain comparable (ratio-of-ratios) on another.
@@ -25,6 +25,7 @@ sys.path[:0] = [os.path.join(REPO_ROOT, "src"), REPO_ROOT]
 BENCHES = {
     "kernel_bench": "BENCH_kernels.json",
     "comm_bench": "BENCH_comm.json",
+    "adaptive_bench": "BENCH_adaptive.json",
 }
 
 
