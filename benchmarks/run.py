@@ -15,6 +15,8 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
                   cost asserts (ISSUE 4)
   adaptive_bench — error-budget vs static-k fronts: bytes-on-wire vs
                   distance-to-optimum (ISSUE 8)
+  fleet_bench   — S-of-N client-sampling fronts: worker vs coordinate
+                  weighting + fleet-scale sampled round timing (ISSUE 9)
   kernel_bench  — Pallas kernel microbenches
   roofline      — §Roofline terms from the dry-run artifacts
   perf_summary  — §Perf hillclimb before/after + multi-pod scaling
@@ -40,6 +42,7 @@ MODULES = [
     "autotune_bench",
     "straggler_bench",
     "adaptive_bench",
+    "fleet_bench",
     "kernel_bench",
     "serve_bench",
     "roofline",

@@ -60,10 +60,12 @@ from repro.comm.codec import (
 )
 from repro.comm.collectives import (
     COLLECTIVES,
+    WEIGHTINGS,
     Collective,
     DenseAllreduce,
     Hierarchical,
     SparseAllgather,
+    check_weighting,
     get_collective,
 )
 from repro.comm.controller import (
@@ -126,10 +128,12 @@ __all__ = [
     "SparseAllgather",
     "ThroughputTable",
     "TopoCalibration",
+    "WEIGHTINGS",
     "as_topo",
     "autotune",
     "calibrate",
     "calibrate_topo",
+    "check_weighting",
     "choose_leaf",
     "controller",
     "delta_index_dtype",

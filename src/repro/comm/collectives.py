@@ -41,6 +41,25 @@ Partial participation composes with every strategy through the optional
 
 ``participation=None`` (the default) is the historical all-workers path,
 bit-for-bit.
+
+Aggregation weighting is a second orthogonal axis (``WEIGHTINGS``):
+
+* ``"worker"`` — the historical Eq. (8) reduction above: each worker's
+  payload is scaled by its (renormalized) per-worker weight omega_n. With
+  sparse payloads this under-weights coordinates that only a few workers
+  selected — the aggregate is a union of per-worker top-k sets, and a
+  coordinate sent by one worker out of N arrives scaled by omega_n ≈ 1/N.
+* ``"coordinate"`` — the fed_dropout_avg renormalize-by-who-actually-sent
+  reduction: per coordinate ``j`` the weighted sum is divided by the mass
+  of the workers that sent ``j``, ``den[j] = Σ_{n : j∈mask_n} omega_n``,
+  so the per-coordinate effective weights always sum to one over the
+  senders. Exposed as ``reference_coord`` / ``shard_coord``, which return
+  ``(agg, den)`` — callers thread ``den`` back into RegTop-k's posterior
+  so Line-8's Delta conditions on the omega the server actually used.
+
+Presence is defined on the decoded *values* (``!= 0``), not the index
+slots: zero-padded payload slots and values a lossy codec (``coo_q8``)
+quantized to exactly zero carry no sender mass.
 """
 from __future__ import annotations
 
@@ -88,6 +107,60 @@ def _shard_weight(weight, participation):
     return weight * participation
 
 
+WEIGHTINGS = ("worker", "coordinate")
+
+
+def check_weighting(name: str) -> str:
+    """Validate a ``weighting=`` axis value.
+
+    >>> check_weighting("coordinate")
+    'coordinate'
+    >>> check_weighting("per-worker")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown weighting 'per-worker'; available: \
+['worker', 'coordinate']
+    """
+    if name not in WEIGHTINGS:
+        raise ValueError(
+            f"unknown weighting {name!r}; available: {list(WEIGHTINGS)}"
+        )
+    return name
+
+
+def _coord_num_den(codec, payloads, weights, length):
+    """Decode a ``[N, ...]`` payload stack into the coordinate-weighting
+    sums: ``num[j] = Σ_n w_n·ghat_n[j]`` and the per-coordinate sender mass
+    ``den[j] = Σ_n w_n·1[ghat_n[j] != 0]``, both ``[L]``.
+
+    One flat scatter-add in worker-stack order for each sum, so the
+    reference form and the gathered shard form (whose stacking order is the
+    mesh-axis order — the same worker order) add in the same sequence and
+    stay bit-for-bit."""
+    vals, idx = jax.vmap(lambda p: codec.decode(p, length))(payloads)
+    w = jnp.asarray(weights)
+    if jnp.ndim(w) == 0:
+        w = jnp.full((vals.shape[0],), w)
+    presence = (vals != 0).astype(vals.dtype)
+    flat_idx = idx.reshape(-1)
+    num = (
+        jnp.zeros((length,), vals.dtype)
+        .at[flat_idx]
+        .add((w[:, None] * vals).reshape(-1))
+    )
+    den = (
+        jnp.zeros((length,), vals.dtype)
+        .at[flat_idx]
+        .add((w[:, None] * presence).reshape(-1))
+    )
+    return num, den
+
+
+def _coord_divide(num: jax.Array, den: jax.Array) -> jax.Array:
+    """``num / den`` with a dtype-derived floor: where no worker sent the
+    coordinate (``den == 0``) the numerator is exactly zero too, so the
+    floored divide yields 0 rather than NaN."""
+    return num / jnp.maximum(den, jnp.finfo(den.dtype).tiny)
 
 
 class Collective:
@@ -112,6 +185,31 @@ class Collective:
         weight: jax.Array | float,
         participation: Optional[jax.Array] = None,
     ) -> jax.Array:
+        raise NotImplementedError
+
+    def reference_coord(
+        self,
+        codec: Codec,
+        payloads: Payload,
+        weights: jax.Array,
+        length: int,
+        participation: Optional[jax.Array] = None,
+    ) -> tuple[jax.Array, jax.Array]:
+        """``weighting="coordinate"`` reference form: returns ``(agg, den)``
+        where ``den[j]`` is the sender mass the server divided by at ``j``
+        (the coordinate-wise omega callers thread back into RegTop-k)."""
+        raise NotImplementedError
+
+    def shard_coord(
+        self,
+        codec: Codec,
+        payload: Payload,
+        length: int,
+        axis_names: Sequence[str],
+        weight: jax.Array | float,
+        participation: Optional[jax.Array] = None,
+    ) -> tuple[jax.Array, jax.Array]:
+        """``weighting="coordinate"`` shard_map form: ``(agg, den)``."""
         raise NotImplementedError
 
 
@@ -155,6 +253,25 @@ class SparseAllgather(Collective):
         gathered, w = _gather_payload((payload, w_local), axis_names)
         return _decode_scatter_stack(codec, gathered, w.reshape(-1), length)
 
+    def reference_coord(
+        self, codec, payloads, weights, length, participation=None
+    ):
+        w = _reference_weights(weights, participation)
+        num, den = _coord_num_den(codec, payloads, w, length)
+        return _coord_divide(num, den), den
+
+    def shard_coord(
+        self, codec, payload, length, axis_names, weight, participation=None
+    ):
+        # the per-worker weight always rides the gather alongside the
+        # payload (even on full rounds): coordinate mode needs every
+        # worker's weight locally to build den in gather-stack order.
+        part = 1.0 if participation is None else participation
+        w_local = (jnp.asarray(weight, jnp.float32) * part).reshape((1,))
+        gathered, w = _gather_payload((payload, w_local), axis_names)
+        num, den = _coord_num_den(codec, gathered, w.reshape(-1), length)
+        return _coord_divide(num, den), den
+
 
 class Hierarchical(Collective):
     """inter-axis allgather of payloads, intra-axis psum of the scattered
@@ -190,6 +307,41 @@ class Hierarchical(Collective):
             )
         return jax.lax.psum(partial, intra)
 
+    def reference_coord(
+        self, codec, payloads, weights, length, participation=None
+    ):
+        # single-process: identical to sparse_allgather (sum over all
+        # workers either way) — the inter/intra grouping is notional.
+        w = _reference_weights(weights, participation)
+        num, den = _coord_num_den(codec, payloads, w, length)
+        return _coord_divide(num, den), den
+
+    def shard_coord(
+        self, codec, payload, length, axis_names, weight, participation=None
+    ):
+        inter, intra = tuple(axis_names[:-1]), axis_names[-1]
+        part = 1.0 if participation is None else participation
+        w_local = (jnp.asarray(weight, jnp.float32) * part).reshape((1,))
+        if inter:
+            gathered, w = _gather_payload((payload, w_local), inter)
+            num, den = _coord_num_den(codec, gathered, w.reshape(-1), length)
+        else:
+            vals, idx = codec.decode(payload, length)
+            presence = (vals != 0).astype(vals.dtype)
+            num = (
+                jnp.zeros((length,), vals.dtype)
+                .at[idx]
+                .add(w_local[0] * vals)
+            )
+            den = (
+                jnp.zeros((length,), vals.dtype)
+                .at[idx]
+                .add(w_local[0] * presence)
+            )
+        num = jax.lax.psum(num, intra)
+        den = jax.lax.psum(den, intra)
+        return _coord_divide(num, den), den
+
 
 class DenseAllreduce(Collective):
     """Uncompressed baseline: the codec is bypassed (dense vector on wire).
@@ -217,6 +369,33 @@ class DenseAllreduce(Collective):
         dense = codec.decoded_dense(payload, length)
         w = _shard_weight(weight, participation)
         return jax.lax.psum(dense * w, tuple(axis_names))
+
+    def reference_coord(
+        self, codec, payloads, weights, length, participation=None
+    ):
+        # dense on the wire, but the *sparsified* gradient is zero off the
+        # selected coordinates — presence still identifies the sender set.
+        dense = jax.vmap(lambda p: codec.decoded_dense(p, length))(payloads)
+        w = (
+            jnp.full((dense.shape[0],), weights)
+            if jnp.ndim(weights) == 0
+            else weights
+        )
+        w = _reference_weights(w, participation)
+        presence = (dense != 0).astype(dense.dtype)
+        num = jnp.einsum("n,nl->l", w, dense)
+        den = jnp.einsum("n,nl->l", w, presence)
+        return _coord_divide(num, den), den
+
+    def shard_coord(
+        self, codec, payload, length, axis_names, weight, participation=None
+    ):
+        dense = codec.decoded_dense(payload, length)
+        w = _shard_weight(weight, participation)
+        presence = (dense != 0).astype(dense.dtype)
+        num = jax.lax.psum(dense * w, tuple(axis_names))
+        den = jax.lax.psum(presence * w, tuple(axis_names))
+        return _coord_divide(num, den), den
 
 
 COLLECTIVES = {

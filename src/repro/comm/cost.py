@@ -216,6 +216,10 @@ def pattern_axes(
     stays full-size (with ``B == 1`` it is the same single ring
     ``dense_allreduce`` prices, and shrinks identically). ``None`` (or
     ``participants == N``) reproduces the full-round pattern exactly.
+    S-of-N client sampling (``Participation(kind="sampled")``) prices the
+    same way with ``participants = S``: only the sampled subset puts
+    payloads on the wire, so an S-of-2000 round costs like an S-worker
+    ring, not a 2000-worker one.
 
     >>> pattern_axes("hierarchical", 1024, 128.0, (2, 4))
     ((128.0, 1), (6144.0, 6))

@@ -42,14 +42,24 @@ Schedules (``kind``):
   ``DistributedSim`` in ``src/repro/core/simulator.py``); each payload is
   delivered exactly once, at most ``staleness`` rounds after it was
   produced.
+* ``sampled``     — federated client sampling: exactly ``n_sampled`` of
+  ``N`` workers per round, drawn by a common-knowledge PRNG (seeded by
+  ``(seed, round)`` like ``bernoulli``, so every worker and the cost
+  model can enumerate the round's cohort locally —
+  :meth:`Participation.round_participants`). Unlike ``bernoulli``, where
+  a dropped worker *computed* a gradient it could not send, an unsampled
+  client is idle: it computes nothing and its sparsifier state is
+  untouched — which is what lets the fleet-scale simulator gather/scatter
+  only the ``S`` sampled rows per round instead of updating all ``N``.
 
 Dropped workers (``bernoulli`` / ``round_robin``) keep their whole
 accumulated gradient in the error accumulator ``eps`` — error feedback
 covers non-participation exactly like it covers sparsification — and
-their posterior statistics (``a_prev``/``s_prev``) stay frozen at the
-last round they actually sent, since the server never saw the skipped
-payload. ``stale`` workers did send (late), so their state advances
-normally.
+their posterior statistics stay frozen at the last round they actually
+sent, since the server never saw the skipped payload (the freeze is
+kind-specific: ``Sparsifier.on_dropped`` owns the slot semantics, since
+e.g. DGC keeps its momentum buffer where RegTop-k keeps ``a_prev``).
+``stale`` workers did send (late), so their state advances normally.
 """
 from __future__ import annotations
 
@@ -59,7 +69,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-PARTICIPATION_KINDS = ("full", "bernoulli", "round_robin", "stale")
+PARTICIPATION_KINDS = ("full", "bernoulli", "round_robin", "stale", "sampled")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,11 +80,13 @@ class Participation:
     True
     >>> Participation("round_robin", n_stragglers=2).kind
     'round_robin'
+    >>> Participation("sampled", n_sampled=32).kind
+    'sampled'
     >>> Participation("bogus")
     Traceback (most recent call last):
         ...
     ValueError: unknown participation kind 'bogus'; available: \
-['full', 'bernoulli', 'round_robin', 'stale']
+['full', 'bernoulli', 'round_robin', 'stale', 'sampled']
     """
 
     kind: str = "full"
@@ -82,7 +94,8 @@ class Participation:
     n_stragglers: int = 1  # round_robin/stale: dropped per round
     staleness: int = 1  # stale: rounds until the late payload lands
     discount: float = 1.0  # stale: weight multiplier on late payloads
-    seed: int = 0  # bernoulli PRNG seed
+    n_sampled: int = 1  # sampled: clients drawn per round
+    seed: int = 0  # bernoulli/sampled PRNG seed
 
     def __post_init__(self):
         if self.kind not in PARTICIPATION_KINDS:
@@ -105,6 +118,10 @@ class Participation:
         if self.discount < 0.0:
             raise ValueError(
                 f"discount must be >= 0, got {self.discount}"
+            )
+        if self.n_sampled < 1:
+            raise ValueError(
+                f"n_sampled must be >= 1, got {self.n_sampled}"
             )
 
     # -- schedule queries ---------------------------------------------------
@@ -151,6 +168,11 @@ at least 2 workers, got 1
                 f"n_stragglers={self.n_stragglers} would drop every one "
                 f"of the {n_workers} workers"
             )
+        if self.kind == "sampled" and self.n_sampled > n_workers:
+            raise ValueError(
+                f"n_sampled={self.n_sampled} exceeds the fleet size "
+                f"{n_workers}"
+            )
         return self
 
     def round_mask(self, round_idx, n_workers: int) -> jax.Array:
@@ -177,10 +199,47 @@ at least 2 workers, got 1
             # renormalized weights are always well defined.
             keep = keep.at[jnp.mod(r, n)].set(True)
             return keep.astype(jnp.float32)
+        if self.kind == "sampled":
+            sidx = self.round_participants(r, n)
+            return jnp.zeros((n,), jnp.float32).at[sidx].set(1.0)
         # round_robin / stale: n_stragglers consecutive workers rotate out
         ns = min(int(self.n_stragglers), n - 1)
         dropped = jnp.mod(r * ns + jnp.arange(ns), n)
         return jnp.ones((n,), jnp.float32).at[dropped].set(0.0)
+
+    def round_participants(self, round_idx, n_workers: int) -> jax.Array:
+        """``sampled`` only: the round's cohort as ``[S]`` sorted int32
+        worker indices — a pure function of ``(schedule, round_idx)``, so
+        the server, every client, and the fleet-scale simulator's
+        gather/scatter path enumerate the same cohort without
+        communication. The static shape ``S = n_sampled`` is what keeps
+        per-round traffic O(S·J) inside one jit.
+
+        >>> p = Participation("sampled", n_sampled=2, seed=0)
+        >>> s0 = p.round_participants(0, 6)
+        >>> s0.shape, s0.dtype
+        ((2,), dtype('int32'))
+        >>> bool((s0 == p.round_participants(0, 6)).all())  # common knowledge
+        True
+        >>> Participation("full").round_participants(0, 6)
+        Traceback (most recent call last):
+            ...
+        ValueError: round_participants is defined for kind='sampled', \
+got 'full'
+        """
+        if self.kind != "sampled":
+            raise ValueError(
+                "round_participants is defined for kind='sampled', "
+                f"got {self.kind!r}"
+            )
+        n = int(n_workers)
+        s = min(int(self.n_sampled), n)
+        r = jnp.asarray(round_idx, jnp.int32)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), r)
+        perm = jax.random.permutation(key, n)
+        # ascending order: aggregation order (and therefore float summation
+        # order) is independent of the draw, matching round_mask's scatter.
+        return jnp.sort(perm[:s]).astype(jnp.int32)
 
     def participating_weights(
         self, weights: jax.Array, round_idx
@@ -217,6 +276,8 @@ at least 2 workers, got 1
         6.0
         >>> Participation("bernoulli", drop_rate=0.5).expected_participants(9)
         5.0
+        >>> Participation("sampled", n_sampled=32).expected_participants(2000)
+        32.0
         """
         n = int(n_workers)
         if self.is_full:
@@ -224,7 +285,43 @@ at least 2 workers, got 1
         if self.kind == "bernoulli":
             # the rotating liveness worker always participates
             return 1.0 + (n - 1) * (1.0 - self.drop_rate)
+        if self.kind == "sampled":
+            return float(min(int(self.n_sampled), n))
         return float(n - min(int(self.n_stragglers), n - 1))
+
+    def effective_omega(self, n_workers: int) -> float:
+        """The scalar aggregation weight a worker's own contribution
+        carries in the broadcast — what RegTop-k's Line-8 posterior must
+        subtract as ``omega``.
+
+        For dropping/sampling schedules a worker's payload, *when it
+        lands*, lands with the renormalized weight ``1/E|P_t|`` (its
+        posterior statistics freeze across skipped rounds, so the
+        conditioning is always on a round it actually sent). Under
+        ``stale`` every payload lands and state advances every round, so
+        the right figure is the unconditional per-round expectation:
+        on-time renormalized mass plus discounted late mass,
+
+            (1 - ns/N) * 1/(N - ns)  +  (ns/N) * discount/N
+          =  1/N + ns * discount / N**2.
+
+        The seed-era code used ``1/(N - ns)`` here, which ignores the
+        late deliveries entirely — wrong whenever ``discount > 0``.
+
+        >>> Participation("round_robin", n_stragglers=2).effective_omega(8)
+        0.16666666666666666
+        >>> Participation("stale", n_stragglers=1, discount=0.5).effective_omega(4)
+        0.28125
+        >>> Participation("stale", n_stragglers=1, discount=0.0).effective_omega(4)
+        0.25
+        >>> Participation("full").effective_omega(4)
+        0.25
+        """
+        n = int(n_workers)
+        if self.kind == "stale":
+            ns = min(int(self.n_stragglers), n - 1)
+            return 1.0 / n + ns * self.discount / float(n) ** 2
+        return 1.0 / self.expected_participants(n)
 
 
 def renormalize_weights(weights: jax.Array, mask: jax.Array) -> jax.Array:
@@ -234,13 +331,21 @@ def renormalize_weights(weights: jax.Array, mask: jax.Array) -> jax.Array:
     result is zero on dropped workers and sums to one whenever at least
     one participant has positive base weight.
 
+    The division floor is the *result dtype's* smallest normal — a
+    hardcoded f32 tiny would be a no-op underflow guard for bf16 weights
+    (bf16 tiny is the same 2**-126 but the sum is computed in bf16) and
+    the wrong epsilon under x64.
+
     >>> import jax.numpy as jnp
     >>> renormalize_weights(jnp.array([0.25, 0.25, 0.25, 0.25]),
     ...                     jnp.array([1.0, 0.0, 1.0, 0.0])).tolist()
     [0.5, 0.0, 0.5, 0.0]
+    >>> renormalize_weights(jnp.full((2,), 0.5, jnp.bfloat16),
+    ...                     jnp.zeros((2,), jnp.bfloat16)).dtype
+    dtype(bfloat16)
     """
     wm = jnp.asarray(weights) * jnp.asarray(mask)
-    return wm / jnp.maximum(wm.sum(), jnp.finfo(jnp.float32).tiny)
+    return wm / jnp.maximum(wm.sum(), jnp.finfo(wm.dtype).tiny)
 
 
 def worker_index(
@@ -263,14 +368,18 @@ def parse_participation(spec: Optional[str]) -> Participation:
 
     Grammar: ``kind[:a[,b[,c]]]`` with positional parameters per kind —
     ``bernoulli:drop_rate[,seed]``, ``round_robin:n_stragglers``,
-    ``stale:n_stragglers[,staleness[,discount]]``; bare ``full`` (or an
-    empty/None spec) is full participation.
+    ``stale:n_stragglers[,staleness[,discount]]``,
+    ``sampled:n_sampled[,seed]``; bare ``full`` (or an empty/None spec)
+    is full participation.
 
     >>> parse_participation("bernoulli:0.25").drop_rate
     0.25
     >>> parse_participation("stale:1,2,0.5")
     Participation(kind='stale', drop_rate=0.0, n_stragglers=1, staleness=2, \
-discount=0.5, seed=0)
+discount=0.5, n_sampled=1, seed=0)
+    >>> parse_participation("sampled:32,7")
+    Participation(kind='sampled', drop_rate=0.0, n_stragglers=1, staleness=1, \
+discount=1.0, n_sampled=32, seed=7)
     >>> parse_participation("full").is_full
     True
     """
@@ -306,6 +415,14 @@ discount=0.5, seed=0)
                 n_stragglers=int(args[0]),
                 staleness=int(args[1]) if len(args) > 1 else 1,
                 discount=float(args[2]) if len(args) > 2 else 1.0,
+            )
+        if kind == "sampled":
+            if not 1 <= len(args) <= 2:
+                raise ValueError("expected sampled:n_sampled[,seed]")
+            return Participation(
+                "sampled",
+                n_sampled=int(args[0]),
+                seed=int(args[1]) if len(args) > 1 else 0,
             )
     except ValueError as e:
         raise ValueError(f"bad --participation spec {spec!r}: {e}") from None

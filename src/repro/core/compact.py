@@ -35,15 +35,23 @@ class CompactState(NamedTuple):
     sent_vals: jax.Array  # [k]   a^{t-1} at sent coords
     sent_g: jax.Array  # [k]   g^{t-1} (aggregated) at sent coords
     sent_idx: jax.Array  # [k]   int32 coords sent at t-1
+    # [k] per-coordinate sender mass den[j] the server divided by at the
+    # sent coords (weighting="coordinate"); exactly 1.0 under worker
+    # weighting, so omega / sent_w == omega bit-for-bit there.
+    sent_w: jax.Array
     t: jax.Array  # []    round counter
 
 
 def compact_init(length: int, k: int, dtype=jnp.float32) -> CompactState:
+    # sent_w starts at 0 (matching the zeros-everywhere state init the
+    # runtimes broadcast); compact_select guards it to 1 before dividing,
+    # and round 0 scores plain Top-k anyway (t == 0).
     return CompactState(
         eps=jnp.zeros((length,), dtype),
         sent_vals=jnp.zeros((k,), dtype),
         sent_g=jnp.zeros((k,), dtype),
         sent_idx=jnp.zeros((k,), jnp.int32),
+        sent_w=jnp.zeros((k,), dtype),
         t=jnp.zeros((), jnp.int32),
     )
 
@@ -143,10 +151,16 @@ def compact_select(
         # regularization so sent scores are mag^y * reg, matching
         # RegTopK._score (t == 0 is plain Top-k — Alg. 2 line 2).
         mag = amag if cfg.y == 1.0 else amag**cfg.y
-        # dense default: unsent coords carry likelihood C = tanh(Q/mu) -> 1
-        denom = cfg.omega * a[st.sent_idx]
+        # dense default: unsent coords carry likelihood C = tanh(Q/mu) -> 1.
+        # Under coordinate weighting the server divided each sent coord by
+        # its sender mass (sent_w), so this worker's effective omega there
+        # was omega / sent_w; worker weighting records sent_w == 1, making
+        # the division exact and the path bit-for-bit with the scalar form.
+        w_safe = jnp.where(st.sent_w > 0, st.sent_w, 1.0)
+        omega_vec = cfg.omega / w_safe
+        denom = omega_vec * a[st.sent_idx]
         safe = jnp.where(denom == 0, 1.0, denom)
-        delta = (st.sent_g - cfg.omega * st.sent_vals) / safe
+        delta = (st.sent_g - omega_vec * st.sent_vals) / safe
         reg = jnp.tanh(jnp.abs(1.0 + delta) / cfg.mu)
         sent_score = mag[st.sent_idx] * reg
         score = jnp.where(
@@ -174,15 +188,27 @@ def compact_select(
     )
 
 
+def _sent_w_at(
+    idx: jax.Array, den: jax.Array | None, dtype
+) -> jax.Array:
+    """Record the sender mass at the sent coords: ``den[idx]`` under
+    coordinate weighting, exactly 1.0 under worker weighting (den=None)."""
+    if den is None:
+        return jnp.ones(idx.shape, dtype)
+    return den[idx].astype(dtype)
+
+
 def compact_finalize(
     st: CompactState,
     a: jax.Array,
     vals: jax.Array,
     idx: jax.Array,
     agg: jax.Array,
+    den: jax.Array | None = None,
 ) -> CompactState:
     """Post-aggregation state update (needs the aggregated gradient to
-    record sent_g for the next round's posterior distortion).
+    record sent_g for the next round's posterior distortion; ``den`` is
+    the per-coordinate sender mass under coordinate weighting).
 
     ``eps' = a - scatter_add(vals, idx)``: exactly zero at genuinely sent
     coordinates (``vals == a[idx]`` there, and ``x - x == 0`` in floats),
@@ -198,6 +224,7 @@ def compact_finalize(
         sent_vals=vals,
         sent_g=agg[idx].astype(vals.dtype),
         sent_idx=idx,
+        sent_w=_sent_w_at(idx, den, st.sent_w.dtype),
         t=st.t + 1,
     )
 
@@ -209,6 +236,7 @@ def compact_finalize_sent(
     sent_idx: jax.Array,
     sent_dense: jax.Array,
     agg: jax.Array,
+    den: jax.Array | None = None,
 ) -> CompactState:
     """Codec-aware finalize: error feedback against what was *actually*
     transmitted. ``sent_dense`` is the decoded wire contribution, so
@@ -222,6 +250,7 @@ def compact_finalize_sent(
         sent_vals=sent_vals.astype(st.sent_vals.dtype),
         sent_g=agg[sent_idx].astype(st.sent_g.dtype),
         sent_idx=sent_idx,
+        sent_w=_sent_w_at(sent_idx, den, st.sent_w.dtype),
         t=st.t + 1,
     )
 
@@ -235,8 +264,13 @@ def reference_step(
     g: jax.Array,
     g_prev_dense: jax.Array,
     k: int,
+    omega_prev: jax.Array | None = None,
 ):
-    """Reconstruct the dense-state step for equivalence testing."""
+    """Reconstruct the dense-state step for equivalence testing.
+
+    ``omega_prev`` is the dense ``[L]`` sender mass under coordinate
+    weighting (what the compact path records at the sent coords as
+    ``sent_w``); None is the scalar worker-weighting oracle."""
     from repro.core.sparsify import SparsifierState, make_sparsifier
 
     L = g.shape[0]
@@ -244,6 +278,10 @@ def reference_step(
         jnp.where(st.t > 0, 1.0, 0.0)
     )
     a_prev = jnp.zeros((L,)).at[st.sent_idx].set(st.sent_vals)
-    dense = SparsifierState(eps=st.eps, a_prev=a_prev, s_prev=s_prev, t=st.t)
+    # test oracle: rebuilding the dense state from the compact layout is
+    # the point of this function.
+    dense = SparsifierState(  # reprolint: disable=RPL106
+        eps=st.eps, a_prev=a_prev, s_prev=s_prev, t=st.t
+    )
     sp = make_sparsifier(dataclasses.replace(cfg, sparsity=k / L, selector="exact"))
-    return sp.step(dense, g, g_prev_dense)
+    return sp.step(dense, g, g_prev_dense, omega_prev=omega_prev)

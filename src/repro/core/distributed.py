@@ -94,9 +94,30 @@ class DistConfig:
     # retrace), and make_sparsify_aggregate threads a per-leaf
     # ControllerState tree alongside the sparsifier state.
     adaptive_k: Optional[comm.AdaptiveKController] = None
+    # aggregation weighting axis ("worker" | "coordinate",
+    # comm.collectives; train.py's --coord-weights). "coordinate"
+    # renormalizes each coordinate by the mass of the workers that
+    # actually sent it and records that mass in the compact state
+    # (sent_w), which RegTop-k's posterior then conditions on; "worker"
+    # is the historical per-worker Eq. (8) reduction, bit-for-bit.
+    weighting: str = "worker"
 
     def resolved_collective(self) -> str:
         return self.collective or self.aggregation
+
+    def resolved_weighting(self) -> str:
+        """The effective weighting axis, with the config gates applied:
+        kind='none' sends every coordinate (sender mass uniformly 1), so
+        coordinate weighting would silently degenerate — reject it."""
+        comm.check_weighting(self.weighting)
+        if self.weighting == "coordinate" and self.sparsifier.kind == "none":
+            raise ValueError(
+                "weighting='coordinate' needs sparse payloads; kind='none' "
+                "sends every coordinate, so the sender mass is uniformly 1 "
+                "and coordinate weighting degenerates to the worker "
+                "reduction — use weighting='worker'"
+            )
+        return self.weighting
 
     def resolved_fastpath(self) -> str:
         """The effective fastpath mode, with the environment gates applied:
@@ -110,6 +131,18 @@ class DistConfig:
                 f"available: {comm.FASTPATH_MODES}"
             )
         if self.fastpath == "off":
+            return "off"
+        if self.weighting == "coordinate" and self.sparsifier.kind == "regtopk":
+            # the fused kernel scores with a *scalar* omega baked into the
+            # pipeline; coordinate weighting scores with omega / sent_w.
+            if self.fastpath == "on":
+                raise ValueError(
+                    "fastpath='on' cannot fuse regtopk under "
+                    "weighting='coordinate': the fused score kernel bakes "
+                    "a scalar omega, but coordinate weighting conditions "
+                    "on the per-coordinate sender mass (sent_w) — use "
+                    "fastpath='off'/'auto'"
+                )
             return "off"
         if self.state_dtype != "float32":
             if self.fastpath == "on":
@@ -336,6 +369,7 @@ def sparsifier_state_shapes(plan, W: int, mesh, dp_axes, dtype):
             sent_vals=jax.ShapeDtypeStruct((W, M, p.k), dtype),
             sent_g=jax.ShapeDtypeStruct((W, M, p.k), dtype),
             sent_idx=jax.ShapeDtypeStruct((W, M, p.k), jnp.int32),
+            sent_w=jax.ShapeDtypeStruct((W, M, p.k), dtype),
             t=jax.ShapeDtypeStruct((W,), jnp.int32),
         )
 
@@ -345,6 +379,7 @@ def sparsifier_state_shapes(plan, W: int, mesh, dp_axes, dtype):
             sent_vals=P(dp, "model", None),
             sent_g=P(dp, "model", None),
             sent_idx=P(dp, "model", None),
+            sent_w=P(dp, "model", None),
             t=P(dp),
         )
 
@@ -426,7 +461,7 @@ def _ctrl_update(ctrl_cfg, ctrl_leaf, new_st, agg, p: LeafPlan, dp_axes,
 # the sparsify+aggregate shard_map stage
 # ---------------------------------------------------------------------------
 def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
-              part_ctx=None, fused=False, k_dyn=None):
+              part_ctx=None, fused=False, k_dyn=None, weighting="worker"):
     """Local (worker x model-shard) view: g [1, *local], st with leading
     [1(,1)] axes. Returns (agg local shard [*local], new state).
 
@@ -455,6 +490,12 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
     ``k_dyn`` (traced int, adaptive-k rounds only) caps the effective
     payload cardinality below the static capacity ``p.k`` — see
     ``compact_select``; ``None`` is the historical static-k selection.
+
+    ``weighting="coordinate"`` renormalizes each coordinate by the sender
+    mass of the workers that actually sent it (``shard_coord`` /
+    presence-psum) and records that mass at the sent coords in the state's
+    ``sent_w``, which the next round's RegTop-k posterior conditions on;
+    ``"worker"`` records 1.0 there and is bit-for-bit the historical path.
     """
     gl = g[0].reshape(p.local_len)
     stl = C.CompactState(
@@ -462,6 +503,7 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
         sent_vals=st.sent_vals[0, 0],
         sent_g=st.sent_g[0, 0],
         sent_idx=st.sent_idx[0, 0],
+        sent_w=st.sent_w[0, 0],
         t=st.t[0],
     )
     if part_ctx is not None:
@@ -484,13 +526,24 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
         )
         omega = scfg.omega if part_ctx is None else w_part
         shard_mask = None if part_ctx is None else m
+        coord = weighting == "coordinate"
+        den = None  # per-coordinate sender mass (coordinate weighting)
         if collective == "dense_allreduce":
             # scatter-ADD: payload padding (value 0 on a real or duplicate
             # index) must be a no-op, never overwrite a live contribution
             ghat = jnp.zeros_like(a).at[idx].add(vals)
             w = omega if part_ctx is None else omega * m
-            agg = jax.lax.psum(ghat * w, dp_axes)
-            new = C.compact_finalize(stl, a, vals, idx, agg)
+            if coord:
+                # presence from the dense contribution (mirrors
+                # DenseAllreduce.shard_coord): padding slots carry value 0
+                # and contribute no sender mass.
+                presence = (ghat != 0).astype(ghat.dtype)
+                num = jax.lax.psum(ghat * w, dp_axes)
+                den = jax.lax.psum(presence * w, dp_axes)
+                agg = num / jnp.maximum(den, jnp.finfo(den.dtype).tiny)
+            else:
+                agg = jax.lax.psum(ghat * w, dp_axes)
+            new = C.compact_finalize(stl, a, vals, idx, agg, den=den)
         else:
             payload = (
                 codec.encode_fused(vals, idx, p.local_len)
@@ -502,17 +555,28 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
                 jnp.zeros_like(a).at[didx].add(dvals.astype(a.dtype))
             )
             strategy = comm.get_collective(collective)
-            agg = strategy.shard(
-                codec, payload, p.local_len, dp_axes, omega,
-                participation=shard_mask,
-            ).astype(a.dtype)
-            new = C.compact_finalize_sent(stl, a, dvals, didx, sent_dense, agg)
+            if coord:
+                agg, den = strategy.shard_coord(
+                    codec, payload, p.local_len, dp_axes, omega,
+                    participation=shard_mask,
+                )
+                agg = agg.astype(a.dtype)
+                den = den.astype(a.dtype)
+            else:
+                agg = strategy.shard(
+                    codec, payload, p.local_len, dp_axes, omega,
+                    participation=shard_mask,
+                ).astype(a.dtype)
+            new = C.compact_finalize_sent(
+                stl, a, dvals, didx, sent_dense, agg, den=den
+            )
         if part_ctx is not None:
             dropped = C.CompactState(
                 eps=a,
                 sent_vals=stl.sent_vals,
                 sent_g=stl.sent_g,
                 sent_idx=stl.sent_idx,
+                sent_w=stl.sent_w,
                 t=stl.t + 1,
             )
             new = jax.tree.map(
@@ -523,6 +587,7 @@ def _spa_leaf(g, st, p: LeafPlan, scfg, codec, collective, dp_axes,
         sent_vals=new.sent_vals[None, None],
         sent_g=new.sent_g[None, None],
         sent_idx=new.sent_idx[None, None],
+        sent_w=new.sent_w[None, None],
         t=new.t[None],
     )
     return agg.reshape(p.local_shape).astype(g.dtype), new_out
@@ -546,14 +611,19 @@ def make_sparsify_aggregate(
             )
     # RegTop-k's posterior distortion subtracts this worker's own
     # contribution omega*a_prev from the broadcast; under a partial
-    # schedule the server aggregated it with the *renormalized* weight
-    # 1/|P_t|, so that is the omega the posterior must condition on —
-    # exact for fixed-size schedules (round_robin), the expected weight
-    # for bernoulli's varying |P_t|.
-    omega = 1.0 / (
-        n_workers if part is None else part.expected_participants(n_workers)
+    # schedule the server aggregated it with the schedule's effective
+    # weight (renormalized 1/|P_t| — exact for fixed-size schedules,
+    # expected for bernoulli; 1/S for client sampling), so that is the
+    # omega the posterior must condition on. Under coordinate weighting
+    # this is the *base* per-worker mass; the per-coordinate divisor
+    # rides the state as sent_w.
+    omega = (
+        1.0 / n_workers
+        if part is None
+        else part.effective_omega(n_workers)
     )
     scfg = dataclasses.replace(dist.sparsifier, omega=omega)
+    weighting = dist.resolved_weighting()
     plan_flat, plan_def = jax.tree.flatten(plan, is_leaf=_is_plan)
     # per-leaf wire choices (one global pair when the plan carries none);
     # resolve + validate every distinct pair up front — fail fast.
@@ -611,6 +681,7 @@ def make_sparsify_aggregate(
             _spa_leaf(
                 g, s, p, scfg, codec, sname, dp, part_ctx, fval,
                 k_dyn=None if c is None else c.k,
+                weighting=weighting,
             )
             for g, s, p, codec, (_, sname), fval, c in zip(
                 g_flat, s_flat, plan_flat, leaf_codecs, wires, fused_flags,

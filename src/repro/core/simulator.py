@@ -45,6 +45,10 @@ class SimState(NamedTuple):
     # controller is disabled — the static-k path is then bit-for-bit
     # unchanged, exactly like the pending fields above).
     ctrl: Optional[comm.ControllerState] = None
+    # per-coordinate sender mass den[j] the server divided by last round
+    # (weighting="coordinate" only; None == scalar worker weighting). This
+    # is the coordinate-wise omega RegTop-k's posterior conditions on.
+    w_agg_prev: Optional[jax.Array] = None  # [J]
 
 
 @dataclasses.dataclass
@@ -87,6 +91,12 @@ class DistributedSim:
     # operand (no retrace), and each round folds the measured
     # ||eps|| / ||g_agg|| ratio back into the controller state.
     adaptive_k: Optional[comm.AdaptiveKController] = None
+    # aggregation weighting axis ("worker" | "coordinate", see
+    # repro.comm.collectives): "coordinate" renormalizes each coordinate
+    # by the mass of the workers that actually sent it and threads that
+    # mass back into RegTop-k's posterior; "worker" is the historical
+    # per-worker Eq. (8) reduction, bit-for-bit.
+    weighting: str = "worker"
 
     def __post_init__(self):
         if self.fastpath not in comm.FASTPATH_MODES:
@@ -96,6 +106,33 @@ class DistributedSim:
             )
         if self.participation is not None:
             self.participation.validate(self.n_workers)
+        comm.check_weighting(self.weighting)
+        if self.weighting == "coordinate":
+            if self.sparsifier_cfg.kind == "none":
+                raise ValueError(
+                    "weighting='coordinate' needs sparse payloads; "
+                    "kind='none' sends every coordinate, so the sender "
+                    "mass is uniformly 1 and coordinate weighting "
+                    "degenerates to the worker reduction — use "
+                    "weighting='worker'"
+                )
+            if (
+                self.participation is not None
+                and self.participation.delays_payloads
+            ):
+                raise ValueError(
+                    "weighting='coordinate' does not compose with the "
+                    "'stale' schedule: late payloads are folded into the "
+                    "broadcast after the per-coordinate renormalization, "
+                    "so the sender mass the server divided by would not "
+                    "cover them"
+                )
+            if self.fastpath == "on":
+                raise ValueError(
+                    "the fused score kernel bakes a scalar omega; "
+                    "weighting='coordinate' requires fastpath='off' "
+                    "(or 'auto', which declines the fusion)"
+                )
         # adaptive-k: resolve the static [k_min, k_max] bounds once (k_max
         # is the payload capacity the traced step allocates).
         self._k_bounds: Optional[Tuple[int, int]] = None
@@ -115,19 +152,25 @@ class DistributedSim:
             self._k_bounds = self.adaptive_k.bounds(self.length)
         # uniform server weights omega_n = 1/N (paper's arithmetic mean);
         # keep the sparsifier's omega consistent with the aggregation. A
-        # partial schedule aggregates participants with the renormalized
-        # weight 1/|P_t| — the omega RegTop-k's posterior must subtract
-        # its own contribution with (exact for fixed-size schedules, the
-        # expected weight for bernoulli).
-        omega = 1.0 / (
-            self.n_workers
+        # partial schedule aggregates with the schedule's effective weight
+        # (Participation.effective_omega): the renormalized 1/|P_t| for
+        # dropping schedules (exact for fixed-size, expected for
+        # bernoulli), 1/S for client sampling, and for 'stale' the
+        # unconditional on-time + discounted-late mass — stale payloads
+        # *do* arrive, so the old 1/(on-time) value was wrong whenever
+        # discount > 0.
+        omega = (
+            1.0 / self.n_workers
             if not self._participation_active
-            else self.participation.expected_participants(self.n_workers)
+            else self.participation.effective_omega(self.n_workers)
         )
         cfg = dataclasses.replace(self.sparsifier_cfg, omega=omega)
         if (
             cfg.kind == "regtopk"
             and cfg.score_fn is None
+            # the fused kernel scores with a *scalar* omega — coordinate
+            # weighting needs the omega_prev-aware reference score path.
+            and self.weighting == "worker"
             and (
                 self.fastpath == "on"
                 or (
@@ -254,6 +297,13 @@ class DistributedSim:
                 if self.adaptive_k is not None
                 else None
             ),
+            # neutral mass: round 0 scores plain Top-k (t == 0), and a
+            # den of 1 makes the where-evaluated posterior branch finite.
+            w_agg_prev=(
+                jnp.ones((self.length,), theta0.dtype)
+                if self.weighting == "coordinate"
+                else None
+            ),
         )
 
     def step_fn(self, state: SimState) -> Tuple[SimState, jax.Array]:
@@ -261,41 +311,73 @@ class DistributedSim:
 
         Under a partial-participation schedule, a round aggregates only
         the participating workers with renormalized weights; dropped
-        workers keep their full accumulated gradient in ``eps`` (error
-        feedback covers non-participation) with their posterior statistics
-        frozen at the last round they sent, while ``stale`` schedules
-        instead park the straggler's weighted, discounted contribution in
-        the per-worker ``pending`` buffer and fold it into the broadcast
-        exactly once, ``staleness`` rounds late. ``g_agg_prev`` is always
-        exactly what the server broadcast — late deliveries included —
-        which is what RegTop-k's posterior conditions on next round.
+        workers are rewritten by their kind's ``Sparsifier.on_dropped``
+        (error feedback keeps the undelivered mass; posterior/momentum/
+        staleness slot semantics are kind-specific), while ``stale``
+        schedules instead park the straggler's weighted, discounted
+        contribution in the per-worker ``pending`` buffer and fold it into
+        the broadcast exactly once, ``staleness`` rounds late. ``sampled``
+        schedules gather the S drawn clients, run the round over S, and
+        scatter the updated states back — idle clients never compute.
+        ``g_agg_prev`` is always exactly what the server broadcast — late
+        deliveries included — which is what RegTop-k's posterior conditions
+        on next round; under ``weighting="coordinate"`` the broadcast also
+        carries the per-coordinate sender mass (``SimState.w_agg_prev``)
+        the server divided by, which next round's posterior conditions on.
         """
-        widx = jnp.arange(self.n_workers)
+        part = self.participation
+        partial = self._participation_active
+        stale = partial and part.delays_payloads
+        sampled = partial and part.kind == "sampled"
+
+        if sampled:
+            # fleet-scale client sampling: gather the S sampled workers'
+            # states, run the round over S only (grads, sparsify, aggregate
+            # at weight 1/S), and scatter the S updated states back at the
+            # end. Unsampled clients are idle — their state is untouched
+            # and nothing O(N·J) is materialized per round.
+            widx = part.round_participants(state.step, self.n_workers)
+            round_ws = jax.tree.map(lambda x: x[widx], state.worker_states)
+            weights = jnp.full(
+                (widx.shape[0],), 1.0 / widx.shape[0], jnp.float32
+            )
+            pmask = None  # the aggregation sees only the S senders
+        else:
+            widx = jnp.arange(self.n_workers)
+            round_ws = state.worker_states
+            weights = self.weights
+            pmask = (
+                part.round_mask(state.step, self.n_workers)
+                if partial
+                else None
+            )
         grads = jax.vmap(self.grad_fn, in_axes=(None, 0))(state.theta, widx)
 
         if self.adaptive_k is None:
             ghat, mask, new_ws = jax.vmap(
-                self.sparsifier.step, in_axes=(0, 0, None)
-            )(state.worker_states, grads, state.g_agg_prev)
+                lambda s, g: self.sparsifier.step(
+                    s, g, state.g_agg_prev, omega_prev=state.w_agg_prev
+                )
+            )(round_ws, grads)
         else:
             # the round sends the k the controller planned *last* round —
             # a dynamic operand of the compiled step (capacity is static).
             k_dyn, cap = state.ctrl.k, self._k_bounds[1]
             ghat, mask, new_ws = jax.vmap(
                 lambda s, g: self.sparsifier.step_dyn(
-                    s, g, state.g_agg_prev, k_dyn, cap
+                    s,
+                    g,
+                    state.g_agg_prev,
+                    k_dyn,
+                    cap,
+                    omega_prev=state.w_agg_prev,
                 )
-            )(state.worker_states, grads)
-        # sparsifier invariant (tested): eps' + ghat == accumulated a —
-        # recoverable here before any codec error feedback touches eps.
-        a_stack = new_ws.eps + ghat
-
-        part = self.participation
-        partial = self._participation_active
-        stale = partial and part.delays_payloads
-        pmask = (
-            part.round_mask(state.step, self.n_workers) if partial else None
-        )
+            )(round_ws, grads)
+        # snapshot before any wire-residual fold: a dropped worker's
+        # payload never traveled, so no codec loss applies to it (the
+        # sparsifier invariant eps' + ghat == accumulated a still holds
+        # here, which is what Sparsifier.on_dropped relies on).
+        pre_ws = new_ws
 
         # kind="none" has no fixed-k payload (the mask is all-ones): always
         # aggregate dense, exactly like the distributed runtime's _spa_leaf.
@@ -304,13 +386,23 @@ class DistributedSim:
             or self.sparsifier_cfg.kind == "none"
         )
         sent_stack = None  # per-worker dense contribution (stale delivery)
+        den = None  # coordinate weighting: per-coordinate sender mass [J]
         if dense_path:
             w = (
-                part.participating_weights(self.weights, state.step)
-                if partial
-                else self.weights
+                part.participating_weights(weights, state.step)
+                if partial and not sampled
+                else weights
             )
-            g_agg = aggregate.dense_mean(ghat, w)
+            if self.weighting == "coordinate":
+                # dense wire, but the sparsified gradient is zero off the
+                # selected coordinates — presence still identifies the
+                # sender set (mirrors DenseAllreduce.reference_coord).
+                presence = (ghat != 0).astype(ghat.dtype)
+                num = aggregate.dense_mean(ghat, w)
+                den = aggregate.dense_mean(presence, w)
+                g_agg = num / jnp.maximum(den, jnp.finfo(den.dtype).tiny)
+            else:
+                g_agg = aggregate.dense_mean(ghat, w)
             sent_stack = ghat
         else:
             codec, L = self._codec, self.length
@@ -325,47 +417,40 @@ class DistributedSim:
             payloads = jax.vmap(lambda v, i: codec.encode(v, i, L))(vals, idx)
             if not codec.lossless:
                 # error feedback covers the codec: fold the decode residual
-                # (intended minus actually-transmitted) back into eps.
+                # (actually-transmitted minus intended) back into the state
+                # via the kind's own hook (RegTop-k also shifts a_prev so
+                # its posterior conditions on what the server decoded).
                 scatter = lambda v, i: jnp.zeros((L,), v.dtype).at[i].add(v)
                 intended = jax.vmap(scatter)(vals, idx)
                 sent = jax.vmap(
                     lambda p: codec.decoded_dense(p, L)
                 )(payloads)
                 delta = (sent - intended).astype(new_ws.eps.dtype)
-                new_ws = new_ws._replace(eps=new_ws.eps - delta)
-                if self.sparsifier_cfg.kind == "regtopk":
-                    # RegTop-k's posterior must condition on what the server
-                    # actually saw: shift a_prev to the decoded values at the
-                    # sent coordinates (mirrors compact_finalize_sent in the
-                    # distributed runtime). Other kinds reuse the a_prev slot
-                    # for momentum/staleness — leave those untouched.
-                    new_ws = new_ws._replace(a_prev=new_ws.a_prev + delta)
-            g_agg = self._strategy.reference(
-                codec, payloads, self.weights, L, participation=pmask
-            ).astype(ghat.dtype)
+                new_ws = self.sparsifier.on_wire_residual(new_ws, delta)
+            if self.weighting == "coordinate":
+                g_agg, den = self._strategy.reference_coord(
+                    codec, payloads, weights, L, participation=pmask
+                )
+                g_agg = g_agg.astype(ghat.dtype)
+            else:
+                g_agg = self._strategy.reference(
+                    codec, payloads, weights, L, participation=pmask
+                ).astype(ghat.dtype)
             if stale:
                 sent_stack = jax.vmap(
                     lambda p: codec.decoded_dense(p, L)
                 )(payloads).astype(ghat.dtype)
 
         pending, pending_age = state.pending, state.pending_age
-        if partial and not stale:
-            # dropped workers sent nothing: their whole accumulated
-            # gradient stays in eps, and their posterior statistics keep
-            # pointing at the last round the server actually saw them.
-            old_ws = state.worker_states
-            dropped_ws = SparsifierState(
-                # kind="none" carries no error state: a dropped worker's
-                # gradient is simply lost (that is the cost this PR's
-                # benchmark measures); every accumulating kind keeps it.
-                eps=(
-                    new_ws.eps
-                    if self.sparsifier_cfg.kind == "none"
-                    else a_stack
-                ),
-                a_prev=old_ws.a_prev,
-                s_prev=old_ws.s_prev,
-                t=new_ws.t,
+        if partial and not stale and not sampled:
+            # dropped workers sent nothing — the rewrite is kind-specific
+            # (DGC keeps momentum where RegTop-k keeps a_prev; CoordTopK's
+            # common staleness counter must keep advancing), so the slot
+            # semantics are owned by Sparsifier.on_dropped, not spelled
+            # out here. Sampled schedules never reach this: unsampled
+            # clients are idle and their state was never stepped.
+            dropped_ws = self.sparsifier.on_dropped(
+                state.worker_states, pre_ws, ghat
             )
             new_ws = jax.tree.map(
                 lambda live, gone: jnp.where(
@@ -418,6 +503,16 @@ class DistributedSim:
                 ctrl, eps_norm, g_norm, k_min=lo, k_max=hi
             )
 
+        if sampled:
+            # scatter the S updated states back into the N-worker fleet
+            # (the controller above observed the active S only — idle
+            # clients carry no fresh round statistics).
+            new_ws = jax.tree.map(
+                lambda full, sub: full.at[widx].set(sub),
+                state.worker_states,
+                new_ws,
+            )
+
         theta = state.theta - self.learning_rate * g_agg
         new_state = SimState(
             theta=theta,
@@ -427,6 +522,11 @@ class DistributedSim:
             pending=pending,
             pending_age=pending_age,
             ctrl=ctrl,
+            w_agg_prev=(
+                den.astype(state.w_agg_prev.dtype)
+                if self.weighting == "coordinate"
+                else None
+            ),
         )
         return new_state, g_agg
 

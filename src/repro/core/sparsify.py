@@ -24,6 +24,28 @@ distortion. Error accumulation, mask memory and step count live in
 ``state`` (a pytree of arrays → shardable, checkpointable, vmappable over a
 leading worker axis).
 
+The optional ``omega_prev`` argument to ``step``/``step_dyn`` is the
+previous round's per-coordinate sender mass ``den[j]`` under
+``weighting="coordinate"`` aggregation (:mod:`repro.comm.collectives`):
+the server divided coordinate ``j`` by ``den[j]``, so this worker's
+effective weight there was ``omega / den[j]`` — RegTop-k's posterior must
+subtract its own contribution with that weight, not the scalar ``omega``.
+``None`` (the default) is the scalar worker-weighting path, bit-for-bit.
+
+Every mutation of ``SparsifierState`` slots lives *here*, behind the
+``Sparsifier`` interface — including the two runtime hooks:
+
+* ``on_wire_residual(state, delta)`` — a lossy codec transmitted
+  ``intended + delta``; fold the residual into error feedback (and, for
+  RegTop-k, into the posterior's ``a_prev`` so Line 8 conditions on what
+  the server actually decoded).
+* ``on_dropped(old_state, new_state, ghat)`` — the worker's payload was
+  dropped by a partial-participation round. Slot semantics are
+  kind-specific (DGC keeps its momentum buffer where RegTop-k keeps
+  ``a_prev``; CoordTopK keeps a *common* staleness counter there), so the
+  rewrite must be owned by the kind — reprolint rule RPL106 flags slot
+  writes anywhere else.
+
 The math follows the paper exactly; see each class's docstring for the
 equation mapping.
 """
@@ -102,8 +124,11 @@ class Sparsifier:
         state: SparsifierState,
         g_local: jax.Array,
         g_agg_prev: jax.Array,
+        omega_prev: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array, SparsifierState]:
-        """Returns (ghat_dense, mask, new_state)."""
+        """Returns (ghat_dense, mask, new_state). ``omega_prev`` is the
+        previous round's per-coordinate sender mass under coordinate
+        weighting (None == scalar worker weighting, bit-for-bit)."""
         raise NotImplementedError
 
     def step_dyn(
@@ -113,6 +138,7 @@ class Sparsifier:
         g_agg_prev: jax.Array,
         k: jax.Array,
         capacity: int,
+        omega_prev: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array, SparsifierState]:
         """``step`` with a *traced* per-round k under a static ``capacity``
         (the adaptive controller's path — see
@@ -121,6 +147,38 @@ class Sparsifier:
         raise NotImplementedError(
             f"sparsifier kind {self.cfg.kind!r} does not support a "
             "dynamic per-round k (adaptive_k drives 'topk'/'regtopk')"
+        )
+
+    # -- runtime hooks (the only sanctioned slot rewrites outside step) ----
+    def on_wire_residual(
+        self, state: SparsifierState, delta: jax.Array
+    ) -> SparsifierState:
+        """A lossy codec put ``intended + delta`` on the wire: error
+        feedback must cover the codec, so the residual folds into ``eps``.
+        """
+        return state._replace(eps=state.eps - delta)
+
+    def on_dropped(
+        self,
+        old_state: SparsifierState,
+        new_state: SparsifierState,
+        ghat: jax.Array,
+    ) -> SparsifierState:
+        """State rewrite for a worker whose round-``t`` payload a partial
+        schedule dropped. ``new_state`` is what ``step`` produced *before*
+        any wire-residual fold (nothing traveled, so no codec loss), and
+        ``ghat`` is the contribution that never arrived.
+
+        Base semantics (topk / regtopk / hard_threshold): the whole
+        accumulated gradient returns to error feedback
+        (``eps = new.eps + ghat == a``) and the posterior statistics stay
+        frozen at the last round the server actually saw this worker.
+        """
+        return SparsifierState(
+            eps=new_state.eps + ghat,
+            a_prev=old_state.a_prev,
+            s_prev=old_state.s_prev,
+            t=new_state.t,
         )
 
     # -- shared helpers ----------------------------------------------------
@@ -155,20 +213,26 @@ class Sparsifier:
 class NoneSparsifier(Sparsifier):
     """Identity compressor — distributed SGD without sparsification."""
 
-    def step(self, state, g_local, g_agg_prev):
+    def step(self, state, g_local, g_agg_prev, omega_prev=None):
         mask = jnp.ones_like(g_local)
         return g_local, mask, state._replace(t=state.t + 1)
+
+    def on_dropped(self, old_state, new_state, ghat):
+        # no error state: a dropped worker's gradient is simply lost
+        # (that is the cost the participation benchmarks measure).
+        return new_state
 
 
 class TopK(Sparsifier):
     """Paper Algorithm 1: a = eps + g; mask = Top_k(|a|); eps' = a - mask*a."""
 
-    def step(self, state, g_local, g_agg_prev):
+    def step(self, state, g_local, g_agg_prev, omega_prev=None):
         a = state.eps + g_local
         mask = self._select(jnp.abs(a))
         return self._finish(state, a, mask)
 
-    def step_dyn(self, state, g_local, g_agg_prev, k, capacity):
+    def step_dyn(self, state, g_local, g_agg_prev, k, capacity,
+                 omega_prev=None):
         a = state.eps + g_local
         mask = self._select_dyn(jnp.abs(a), k, capacity)
         return self._finish(state, a, mask)
@@ -186,14 +250,31 @@ class RegTopK(Sparsifier):
     """
 
     def _score(
-        self, state: SparsifierState, a: jax.Array, g_prev: jax.Array
+        self,
+        state: SparsifierState,
+        a: jax.Array,
+        g_prev: jax.Array,
+        omega_prev: Optional[jax.Array] = None,
     ) -> jax.Array:
         cfg = self.cfg
         if cfg.score_fn is not None:
+            if omega_prev is not None:
+                raise ValueError(
+                    "the fused score kernel bakes a scalar omega; "
+                    "coordinate weighting (omega_prev) requires the "
+                    "reference score path (fastpath off)"
+                )
             return cfg.score_fn(a, state.a_prev, state.s_prev, g_prev, cfg)
-        denom = cfg.omega * a
+        omega = cfg.omega
+        if omega_prev is not None:
+            # coordinate weighting: the server divided coordinate j by the
+            # sender mass den[j], so this worker's weight there was
+            # omega / den[j]. Where den == 0 nobody sent j — s_prev == 0
+            # there too, so the guard value never reaches the score.
+            omega = cfg.omega / jnp.where(omega_prev > 0, omega_prev, 1.0)
+        denom = omega * a
         safe = jnp.where(denom == 0, 1.0, denom)
-        delta_sent = (g_prev - cfg.omega * state.a_prev) / safe
+        delta_sent = (g_prev - omega * state.a_prev) / safe
         delta = jnp.where(state.s_prev > 0, delta_sent, cfg.q_const)
         reg = jnp.tanh(jnp.abs(1.0 + delta) / cfg.mu)
         mag = jnp.abs(a)
@@ -201,21 +282,35 @@ class RegTopK(Sparsifier):
             mag = mag**cfg.y
         return mag * reg
 
-    def step(self, state, g_local, g_agg_prev):
+    def step(self, state, g_local, g_agg_prev, omega_prev=None):
         a = state.eps + g_local
         score = jnp.where(
-            state.t == 0, jnp.abs(a), self._score(state, a, g_agg_prev)
+            state.t == 0,
+            jnp.abs(a),
+            self._score(state, a, g_agg_prev, omega_prev),
         )
         mask = self._select(score)
         return self._finish(state, a, mask)
 
-    def step_dyn(self, state, g_local, g_agg_prev, k, capacity):
+    def step_dyn(self, state, g_local, g_agg_prev, k, capacity,
+                 omega_prev=None):
         a = state.eps + g_local
         score = jnp.where(
-            state.t == 0, jnp.abs(a), self._score(state, a, g_agg_prev)
+            state.t == 0,
+            jnp.abs(a),
+            self._score(state, a, g_agg_prev, omega_prev),
         )
         mask = self._select_dyn(score, k, capacity)
         return self._finish(state, a, mask)
+
+    def on_wire_residual(self, state, delta):
+        # the posterior must condition on what the server actually
+        # decoded: shift a_prev to the transmitted values at the sent
+        # coordinates (mirrors compact_finalize_sent in the distributed
+        # runtime) on top of the base error-feedback fold.
+        return state._replace(
+            eps=state.eps - delta, a_prev=state.a_prev + delta
+        )
 
 
 class HardThreshold(Sparsifier):
@@ -225,7 +320,7 @@ class HardThreshold(Sparsifier):
     payload variant is available through ``selectors.mask_to_payload``).
     """
 
-    def step(self, state, g_local, g_agg_prev):
+    def step(self, state, g_local, g_agg_prev, omega_prev=None):
         a = state.eps + g_local
         mask = (jnp.abs(a) >= self.cfg.threshold).astype(a.dtype)
         return self._finish(state, a, mask)
@@ -253,7 +348,7 @@ class CoordTopK(Sparsifier):
     Top-k plateaus (see EXPERIMENTS.md §Claims).
     """
 
-    def step(self, state, g_local, g_agg_prev):
+    def step(self, state, g_local, g_agg_prev, omega_prev=None):
         a = state.eps + g_local
         # a_prev slot stores the (common) staleness counter
         stale = state.a_prev
@@ -269,6 +364,14 @@ class CoordTopK(Sparsifier):
         )
         return ghat, mask, new_state
 
+    def on_dropped(self, old_state, new_state, ghat):
+        # the staleness counter is *common information*: every worker
+        # derives the identical mask from the broadcast aggregate, so a
+        # dropped worker's counter must advance in lockstep (freezing it —
+        # the pre-hook simulator behavior — desynchronizes the fleet's
+        # round-robin coverage). Only the undelivered mass returns to eps.
+        return new_state._replace(eps=new_state.eps + ghat)
+
 
 class DGC(Sparsifier):
     """Deep Gradient Compression (Lin et al., ICLR'18 [26]) — Top-k with
@@ -281,7 +384,7 @@ class DGC(Sparsifier):
     The momentum factor ``m`` comes from ``SparsifierConfig.momentum``.
     """
 
-    def step(self, state, g_local, g_agg_prev):
+    def step(self, state, g_local, g_agg_prev, omega_prev=None):
         u = self.cfg.momentum * state.a_prev + g_local  # a_prev slot holds u
         v = state.eps + u
         mask = self._select(jnp.abs(v))
@@ -293,6 +396,18 @@ class DGC(Sparsifier):
             t=state.t + 1,
         )
         return ghat, mask, new_state
+
+    def on_dropped(self, old_state, new_state, ghat):
+        # restore the undelivered mass: eps = (v - ghat) + ghat = v. The
+        # a_prev slot holds the masked velocity (1 - mask)·u — exactly the
+        # unsent-coordinate recursion DGC already runs, so keeping it is
+        # the minimal perturbation: at would-have-sent coordinates the
+        # velocity resets (their mass now lives in eps), everywhere else
+        # the momentum correction proceeds as if the drop never happened.
+        # Freezing a_prev at the *old* u instead (the pre-hook simulator
+        # behavior) double-counts: the momentum folded into v would be
+        # re-applied through m·u next round.
+        return new_state._replace(eps=new_state.eps + ghat)
 
 
 KINDS = {

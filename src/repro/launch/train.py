@@ -141,12 +141,20 @@ def main():
     ap.add_argument("--participation", default=None, metavar="SPEC",
                     help="partial-participation schedule over the dp "
                          "worker group: 'full' (default), "
-                         "'bernoulli:drop_rate[,seed]', or "
-                         "'round_robin:n_stragglers' — dropped workers "
+                         "'bernoulli:drop_rate[,seed]', "
+                         "'round_robin:n_stragglers', or "
+                         "'sampled:S[,seed]' (S-of-N client sampling via "
+                         "a common-knowledge PRNG) — dropped workers "
                          "keep their payload in the error accumulator and "
                          "the round aggregates with renormalized weights "
                          "('stale:...' bounded-staleness delivery is "
                          "simulator-only)")
+    ap.add_argument("--coord-weights", action="store_true",
+                    help="per-coordinate aggregation weights: renormalize "
+                         "each coordinate by the mass of the workers that "
+                         "actually sent it instead of one per-worker "
+                         "scalar (weighting='coordinate'; implies "
+                         "fastpath stays off for regtopk)")
     ap.add_argument("--adaptive-k", default=None, metavar="SPEC",
                     help="error-budget-driven per-round k: "
                          "'budget[,k_min,k_max]' — the controller grows/"
@@ -275,7 +283,14 @@ def main():
         participation=participation,
         fastpath=args.fastpath,
         adaptive_k=adaptive_k,
+        weighting="coordinate" if args.coord_weights else "worker",
     )
+    if args.coord_weights:
+        print(
+            "weighting: coordinate — per-coordinate renormalization over "
+            "the workers that sent each coordinate",
+            flush=True,
+        )
     if args.fastpath != "off":
         print(
             f"fastpath: {args.fastpath} (resolved "

@@ -361,9 +361,7 @@ def test_q8_sim_state_matches_compact_runtime_state():
         sent = jnp.zeros(L).at[di].add(dv)
         intended = jnp.zeros(L).at[idx].add(vals)
         delta = sent - intended
-        dense_st = new_ws._replace(
-            eps=new_ws.eps - delta, a_prev=new_ws.a_prev + delta
-        )
+        dense_st = sp.on_wire_residual(new_ws, delta)
         # compact path (distributed runtime algebra)
         a, cvals, cidx = C.compact_select(cfg, comp_st, g, k)
         cdv, cdi = codec.decode(codec.encode(cvals, cidx, L), L)

@@ -100,8 +100,9 @@ def test_regtopk_score_matches_dense_sparsifier_scoring():
     s_prev = (jax.random.uniform(ks[3], (n,)) > 0.5).astype(jnp.float32)
     cfg = SparsifierConfig(kind="regtopk", mu=1.5, omega=0.25, q_const=1e9)
     sp = RegTopK(cfg)
-    st_ = SparsifierState(eps=jnp.zeros(n), a_prev=a_prev, s_prev=s_prev,
-                          t=jnp.ones((), jnp.int32))
+    st_ = SparsifierState(  # reprolint: disable=RPL106 (kernel parity)
+        eps=jnp.zeros(n), a_prev=a_prev, s_prev=s_prev,
+        t=jnp.ones((), jnp.int32))
     want = sp._score(st_, a, g_prev)
     got = ops.regtopk_score(a, a_prev, s_prev, g_prev, omega=0.25, mu=1.5,
                             interpret=True)
@@ -119,8 +120,9 @@ def test_regtopk_score_y_exponent_matches_dense(y):
     a, a_prev, s_prev, g_prev = _parity_inputs(n, "float32", seed=8)
     cfg = SparsifierConfig(kind="regtopk", mu=1.5, omega=0.25, y=y)
     sp = RegTopK(cfg)
-    st_ = SparsifierState(eps=jnp.zeros(n), a_prev=a_prev, s_prev=s_prev,
-                          t=jnp.ones((), jnp.int32))
+    st_ = SparsifierState(  # reprolint: disable=RPL106 (kernel parity)
+        eps=jnp.zeros(n), a_prev=a_prev, s_prev=s_prev,
+        t=jnp.ones((), jnp.int32))
     want = sp._score(st_, a, g_prev)
     got = ops.regtopk_score(a, a_prev, s_prev, g_prev, omega=0.25, mu=1.5,
                             y=y, interpret=True)

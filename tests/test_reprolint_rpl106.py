@@ -1,0 +1,79 @@
+"""RPL106 fixtures: SparsifierState slot discipline."""
+import textwrap
+
+from tools.reprolint import lint_paths
+
+
+def _lint(tmp_path, source, rel="fixture.py"):
+    f = tmp_path / rel
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    viols, n_files = lint_paths(
+        [str(f)], select=["RPL106"], repo_root=str(tmp_path)
+    )
+    assert n_files == 1
+    return viols
+
+
+_CONSTRUCT = """
+    from repro.core.sparsify import SparsifierState
+
+    def rewrite_dropped(a_stack, new_ws):
+        return SparsifierState(
+            eps=a_stack, a_prev=new_ws.a_prev,
+            s_prev=new_ws.s_prev, t=new_ws.t,
+        )
+    """
+
+
+def test_constructor_outside_owner_flags(tmp_path):
+    viols = _lint(tmp_path, _CONSTRUCT)
+    assert len(viols) == 1
+    assert viols[0].rule == "RPL106"
+    assert "kind-specific" in viols[0].message
+
+
+def test_constructor_in_owning_module_is_exempt(tmp_path):
+    viols = _lint(tmp_path, _CONSTRUCT, rel="src/repro/core/sparsify.py")
+    assert viols == []
+
+
+def test_replace_of_unique_slots_flags(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        def freeze(old, new):
+            return new._replace(a_prev=old.a_prev, s_prev=old.s_prev)
+        """,
+    )
+    assert len(viols) == 1
+    assert "a_prev=" in viols[0].message
+    assert "s_prev=" in viols[0].message
+
+
+def test_eps_only_replace_is_legal(tmp_path):
+    # CompactState shares the ``eps`` field name; a bare eps replace
+    # must not be claimed by this rule.
+    viols = _lint(
+        tmp_path,
+        """
+        def fold(st, delta):
+            return st._replace(eps=st.eps - delta)
+        """,
+    )
+    assert viols == []
+
+
+def test_same_line_suppression(tmp_path):
+    viols = _lint(
+        tmp_path,
+        """
+        from repro.core.sparsify import SparsifierState
+
+        def fabricate(z):
+            return SparsifierState(  # reprolint: disable=RPL106
+                eps=z, a_prev=z, s_prev=z, t=0,
+            )
+        """,
+    )
+    assert viols == []

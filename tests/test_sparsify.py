@@ -381,7 +381,7 @@ def test_y_exponent_changes_ranking():
     cfg2 = SparsifierConfig(kind="regtopk", sparsity=0.5, mu=1.0, y=0.1)
     sp1, sp2 = make_sparsifier(cfg1), make_sparsifier(cfg2)
     a = jnp.array([10.0, 1.0])
-    st1 = sp1.init(2)._replace(
+    st1 = sp1.init(2)._replace(  # reprolint: disable=RPL106 (test setup)
         s_prev=jnp.array([1.0, 1.0]),
         a_prev=jnp.array([10.0, 1.0]),
         t=jnp.ones((), jnp.int32),

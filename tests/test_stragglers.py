@@ -537,3 +537,62 @@ def test_shard_map_partial_participation_round():
     assert res["rr_diff"] < 1e-4
     # the partial run actually differs from the full run (workers dropped)
     assert res["rr_vs_base"] > 0
+
+
+# ---------------------------------------------------------------------------
+# fleet-scale S-of-N client sampling (ISSUE 9)
+# ---------------------------------------------------------------------------
+def test_sampled_fleet_scale_round():
+    """N = 2000 clients, S = 32 sampled per round: the jitted sampled
+    round gathers only the drawn clients' states, so idle clients are
+    untouched (their round counter never advances) and per-round work is
+    O(S·J), not O(N·J)."""
+    N, S, J = 2000, 32, 64
+    b = jax.random.normal(jax.random.PRNGKey(0), (N, J))
+    part = comm.Participation("sampled", n_sampled=S, seed=5)
+    sim = DistributedSim(
+        lambda th, n: th - b[n], N, J,
+        SparsifierConfig(kind="regtopk", sparsity=0.1, mu=1.0),
+        learning_rate=1e-2, collective="sparse_allgather",
+        participation=part, weighting="coordinate",
+    )
+    step = jax.jit(lambda s: sim.step_fn(s)[0])
+    s1 = step(sim.init(jnp.zeros(J)))
+    s2 = step(s1)
+    widx0 = np.asarray(part.round_participants(0, N))
+    t1 = np.asarray(s1.worker_states.t)
+    assert (t1[widx0] == 1).all()
+    assert t1.sum() == S  # every unsampled client stayed idle
+    assert np.asarray(s2.worker_states.t).sum() == 2 * S
+    assert np.isfinite(np.asarray(s2.theta)).all()
+    assert np.isfinite(np.asarray(s2.g_agg_prev)).all()
+    # the round's aggregate only carries sampled clients' coordinates
+    den = np.asarray(s2.w_agg_prev)
+    assert ((den >= 0) & (den <= 1.0 + 1e-6)).all() and (den > 0).any()
+
+
+def test_sampled_matches_explicit_subset_average():
+    """One sampled round == hand-averaging the drawn clients' local
+    sparsified gradients at weight 1/S (worker weighting)."""
+    N, S, J = 12, 3, 24
+    b = jax.random.normal(jax.random.PRNGKey(1), (N, J))
+    part = comm.Participation("sampled", n_sampled=S, seed=9)
+    cfg = SparsifierConfig(kind="topk", sparsity=0.25)
+    sim = DistributedSim(
+        lambda th, n: th - b[n], N, J, cfg,
+        collective="sparse_allgather", participation=part,
+    )
+    state = sim.init(jnp.zeros(J))
+    _, g_agg = jax.jit(sim.step_fn)(state)
+    from repro.core.sparsify import make_sparsifier
+
+    sp = make_sparsifier(cfg)
+    widx = np.asarray(part.round_participants(0, N))
+    want = np.zeros(J)
+    for n in widx:
+        ghat, _, _ = sp.step(
+            sp.init(J), jnp.zeros(J) - b[n], jnp.zeros(J)
+        )
+        want = want + np.asarray(ghat) / S
+    np.testing.assert_allclose(np.asarray(g_agg), want, rtol=1e-5,
+                               atol=1e-6)

@@ -4,9 +4,16 @@ project-level import-and-inspect pass with its own entry point.
 """
 from __future__ import annotations
 
-from tools.reprolint.rules import rpl101, rpl102, rpl103, rpl104, rpl105
+from tools.reprolint.rules import (
+    rpl101,
+    rpl102,
+    rpl103,
+    rpl104,
+    rpl105,
+    rpl106,
+)
 
-FILE_RULES = (rpl101, rpl102, rpl103, rpl104)
+FILE_RULES = (rpl101, rpl102, rpl103, rpl104, rpl106)
 PROJECT_RULES = (rpl105,)
 
 KNOWN_RULES = frozenset(

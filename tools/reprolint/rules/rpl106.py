@@ -1,0 +1,87 @@
+"""RPL106 — SparsifierState slot discipline.
+
+``SparsifierState`` reuses its slots across sparsifier kinds:
+``a_prev`` holds RegTop-k's accepted gradient, DGC's momentum buffer,
+and CoordTopK's common-knowledge staleness counters; ``s_prev`` and
+``eps`` are folded differently per kind. Code outside
+``repro.core.sparsify`` cannot know which interpretation is live for
+the configured kind, so a direct field-write — constructing a
+``SparsifierState`` from loose arrays or ``._replace``-ing the
+kind-overloaded slots — silently corrupts state for every kind except
+the one the writer had in mind (the dropped-worker rewrite bug fixed
+alongside this rule). Route such rewrites through the owning
+``Sparsifier`` hooks (``on_dropped`` / ``on_wire_residual``) instead.
+
+Flags, in every file except the owning module
+``src/repro/core/sparsify.py``:
+
+* any ``SparsifierState(...)`` constructor call;
+* any ``._replace(...)`` call passing ``a_prev=`` or ``s_prev=``
+  keywords (slot names unique to ``SparsifierState`` in this repo;
+  a bare ``eps=`` replace is not flagged because ``CompactState``
+  shares that field name and owns its own error accumulator).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.reprolint.violations import Violation
+
+RULE = "RPL106"
+SUMMARY = (
+    "SparsifierState slot write outside repro.core.sparsify — use the "
+    "Sparsifier hooks (on_dropped / on_wire_residual)"
+)
+
+OWNER = "src/repro/core/sparsify.py"
+_UNIQUE_SLOTS = frozenset({"a_prev", "s_prev"})
+
+
+def check(ctx) -> List[Violation]:
+    if ctx.rel.replace("\\", "/") == OWNER:
+        return []
+    info = ctx.info
+    out: List[Violation] = []
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = info.resolve(node.func) or ""
+        if resolved.rsplit(".", 1)[-1] == "SparsifierState":
+            out.append(
+                Violation(
+                    ctx.rel,
+                    node.lineno,
+                    node.col_offset,
+                    RULE,
+                    "SparsifierState constructed outside "
+                    "repro.core.sparsify — slot meaning is "
+                    "kind-specific (a_prev is momentum for DGC, "
+                    "staleness counters for CoordTopK); use the "
+                    "Sparsifier hooks instead",
+                )
+            )
+            continue
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "_replace"
+        ):
+            hit = sorted(
+                kw.arg
+                for kw in node.keywords
+                if kw.arg in _UNIQUE_SLOTS
+            )
+            if hit:
+                out.append(
+                    Violation(
+                        ctx.rel,
+                        node.lineno,
+                        node.col_offset,
+                        RULE,
+                        f"._replace({', '.join(h + '=' for h in hit)}...) "
+                        "rewrites kind-overloaded SparsifierState slots "
+                        "outside repro.core.sparsify — use the "
+                        "Sparsifier hooks instead",
+                    )
+                )
+    return out

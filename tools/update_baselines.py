@@ -26,6 +26,7 @@ BENCHES = {
     "kernel_bench": "BENCH_kernels.json",
     "comm_bench": "BENCH_comm.json",
     "adaptive_bench": "BENCH_adaptive.json",
+    "fleet_bench": "BENCH_fleet.json",
 }
 
 
