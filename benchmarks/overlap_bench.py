@@ -1,0 +1,225 @@
+"""Bucketed overlap scheduler bench (ISSUE 10 tentpole).
+
+Three sections, each CI-gated:
+
+* **Predicted schedule** — plans a heterogeneous leaf tree on a (2, 4) dp
+  mesh with a slow-outer :class:`~repro.comm.cost.LinkTopo` (outer beta
+  10x the intra link) and *asserts* the acceptance criteria in-bench: the
+  4-bucket overlapped timeline is strictly below the synchronous per-leaf
+  sum, and the 1-bucket timeline equals it (fp-tolerant). Accounting rows
+  (``us=0``, skipped by the timing gate) publish the sync/overlapped
+  microseconds and the speedup.
+* **Measured replay** — times real per-bucket compute slices
+  (``time_call`` on jitted backward-sized elementwise work) and replays
+  them through the same :func:`~repro.comm.overlap.overlap_timeline`
+  scheduler, confirming the overlapped round stays strictly below the
+  measured-compute + modeled-wire synchronous sum.
+* **Timed rounds** — runs the real ``make_sparsify_aggregate`` round
+  (via ``assemble`` on a micro model) with ``overlap="off"`` vs
+  ``overlap="buckets:3"`` and asserts the trained parameters are
+  bit-for-bit identical — the off-switch guarantee — while reporting both
+  step timings for the regression gate.
+
+Standalone: ``python benchmarks/overlap_bench.py --json
+BENCH_overlap.json`` feeds the CI perf gate (`tools/check_perf.py` vs
+`benchmarks/baselines/BENCH_overlap.json`).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro import comm
+from repro.comm.autotune import plan_tree
+
+DP_SIZES = (2, 4)
+# slow outer axis: 10x the intra link's per-byte cost (and 10x alpha) —
+# the regime where hierarchical wins and its inter stage is worth hiding.
+TOPO = comm.LinkTopo(
+    (comm.AlphaBeta(1e-4, 1e-8), comm.AlphaBeta(1e-5, 1e-9))
+)
+N_BUCKETS = 4
+
+
+def _leaf_tree():
+    """A heterogeneous LeafPlan tree (embedding-sized shards down to tiny
+    biases) — the shape real parameter trees have."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import LeafPlan
+
+    sizes = [1 << 18, 1 << 17, 1 << 16, 1 << 16, 1 << 14, 1 << 10, 256, 64]
+    return {
+        f"leaf{i:02d}": LeafPlan(
+            (n,), (n,), n, max(1, n // 32), P(None)
+        )
+        for i, n in enumerate(sizes)
+    }
+
+
+def _predicted_rows():
+    tree = _leaf_tree()
+    kw = dict(collectives=["hierarchical"])
+    cp_sync = plan_tree(tree, DP_SIZES, TOPO, **kw)
+    cp1 = plan_tree(
+        tree, DP_SIZES, TOPO, overlap=comm.OverlapConfig(n_buckets=1), **kw
+    )
+    cpB = plan_tree(
+        tree,
+        DP_SIZES,
+        TOPO,
+        overlap=comm.OverlapConfig(n_buckets=N_BUCKETS),
+        **kw,
+    )
+    # acceptance: strictly below synchronous at B buckets, equal at one.
+    assert cpB.timeline.seconds < cp_sync.total_seconds, (
+        f"overlapped {cpB.timeline.seconds:.6e}s is not strictly below "
+        f"synchronous {cp_sync.total_seconds:.6e}s on a slow-outer topo"
+    )
+    assert np.isclose(
+        cp1.timeline.seconds, cp1.total_seconds, rtol=1e-9
+    ), (
+        f"1-bucket timeline {cp1.timeline.seconds:.6e}s != synchronous "
+        f"sum {cp1.total_seconds:.6e}s"
+    )
+    assert sorted(cpB.buckets.leaf_order()) == list(range(len(tree)))
+    speedup = cp_sync.total_seconds / cpB.timeline.seconds
+    return [
+        row(
+            "overlap/predicted/sync",
+            0.0,
+            f"seconds_us={cp_sync.total_seconds * 1e6:.1f};"
+            f"leaves={len(tree)}",
+        ),
+        row(
+            f"overlap/predicted/buckets={N_BUCKETS}",
+            0.0,
+            f"seconds_us={cpB.timeline.seconds * 1e6:.1f};"
+            f"n_buckets={cpB.buckets.n_buckets};speedup={speedup:.3f}",
+        ),
+        row(
+            "overlap/predicted/buckets=1",
+            0.0,
+            f"seconds_us={cp1.timeline.seconds * 1e6:.1f};"
+            "equals_sync=1",
+        ),
+    ]
+
+
+def _replay_rows():
+    """Measure per-bucket compute, replay through the scheduler."""
+    tree = _leaf_tree()
+    cpB = plan_tree(
+        tree,
+        DP_SIZES,
+        TOPO,
+        collectives=["hierarchical"],
+        overlap=comm.OverlapConfig(n_buckets=N_BUCKETS),
+    )
+
+    @jax.jit
+    def slab(v):
+        return jnp.tanh(v * 1e-3) + v * v
+
+    # one backward-slice per bucket, sized by the bucket's leaf bytes —
+    # real measured seconds threaded into the same timeline recurrence.
+    comp = []
+    for b in cpB.buckets.buckets:
+        n = max(1024, int(math.sqrt(b.bytes_on_wire)) * 16)
+        comp.append(
+            time_call(slab, jnp.ones((n,), jnp.float32), iters=3) / 1e6
+        )
+    tl = comm.overlap_timeline(cpB.buckets, comp)
+    assert tl.seconds < tl.sync_seconds, (
+        f"measured replay: overlapped {tl.seconds:.6e}s is not strictly "
+        f"below synchronous {tl.sync_seconds:.6e}s"
+    )
+    return [
+        row(
+            "overlap/replay/measured_compute",
+            0.0,
+            f"sync_us={tl.sync_seconds * 1e6:.1f};"
+            f"overlap_us={tl.seconds * 1e6:.1f};"
+            f"speedup={tl.sync_seconds / tl.seconds:.3f}",
+        )
+    ]
+
+
+def _timed_rows():
+    """Real aggregation rounds, off vs bucketed — bit-for-bit + timing."""
+    from repro.compat import make_mesh
+    from repro.core.distributed import (
+        DistConfig,
+        assemble,
+        init_sparsifier_state,
+    )
+    from repro.core.sparsify import SparsifierConfig
+    from repro.data import TokenPipeline
+    from repro.models import ModelConfig, get_family
+    from repro.optim import OptConfig, make_optimizer
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = ModelConfig(
+        name="tiny", family="dense", n_layers=1, d_model=32, n_heads=2,
+        n_kv_heads=2, head_dim=16, d_ff=64, vocab=128, remat=False,
+    )
+    mod = get_family(cfg)
+    pipe = TokenPipeline(cfg, global_batch=4, seq=16)
+
+    def train(overlap, steps=3):
+        dist = DistConfig(
+            sparsifier=SparsifierConfig(
+                kind="regtopk", sparsity=0.05, mu=1.0
+            ),
+            optimizer=OptConfig(kind="adam", learning_rate=3e-3),
+            aggregation="sparse_allgather",
+            dp_axes=("data",),
+            overlap=overlap,
+        )
+        asm = assemble(mod, cfg, dist, mesh)
+        params, _ = mod.init(jax.random.PRNGKey(0), cfg)
+        opt = make_optimizer(dist.optimizer)
+        opt_state = opt.init(params)
+        sp_state, _ = init_sparsifier_state(
+            asm.plan, 1, mesh, ("data",), jnp.float32
+        )
+        step = jax.jit(asm.train_step)
+        with mesh:
+            for t in range(steps):
+                params, opt_state, sp_state, m = step(
+                    params, opt_state, sp_state, pipe.batch_at(t)
+                )
+            us = time_call(
+                step, params, opt_state, sp_state, pipe.batch_at(0),
+                iters=3,
+            )
+        return params, us
+
+    p_off, us_off = train("off")
+    p_on, us_on = train("buckets:3")
+    diff = max(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(p_off), jax.tree.leaves(p_on))
+    )
+    assert diff == 0.0, (
+        f"overlap='buckets:3' diverged from 'off' by {diff:.3e} — the "
+        "off-switch must be bit-for-bit"
+    )
+    return [
+        row("overlap/spa/off", us_off, "bitforbit=1"),
+        row("overlap/spa/buckets=3", us_on, "bitforbit=1"),
+    ]
+
+
+def run():
+    return _predicted_rows() + _replay_rows() + _timed_rows()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+
+    bench_main(run, "overlap_bench")

@@ -17,7 +17,11 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
                   distance-to-optimum (ISSUE 8)
   fleet_bench   — S-of-N client-sampling fronts: worker vs coordinate
                   weighting + fleet-scale sampled round timing (ISSUE 9)
+  overlap_bench — bucketed overlap scheduler: predicted + measured-replay
+                  timelines vs synchronous, bit-for-bit off switch
+                  (ISSUE 10)
   kernel_bench  — Pallas kernel microbenches
+  serve_bench   — decode tokens/s per family + per-token cache bytes
   roofline      — §Roofline terms from the dry-run artifacts
   perf_summary  — §Perf hillclimb before/after + multi-pod scaling
 """
@@ -43,6 +47,7 @@ MODULES = [
     "straggler_bench",
     "adaptive_bench",
     "fleet_bench",
+    "overlap_bench",
     "kernel_bench",
     "serve_bench",
     "roofline",

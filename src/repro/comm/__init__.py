@@ -23,6 +23,11 @@ Five layers:
   policy layer: the fusability matrix, the measured-throughput
   :class:`ThroughputTable` behind ``fastpath="auto"``, and the runtime
   routing into the Pallas kernel (``repro.kernels.fused_encode``).
+* :mod:`repro.comm.overlap`      — bucketed overlap scheduling: greedy
+  size-balanced bucketing of the leaf tree (:func:`bucketize` →
+  :class:`BucketPlan`) and the pipelined round :class:`Timeline` that
+  hides the slow inter-axis stage behind the next bucket's intra-axis
+  work, behind ``DistConfig.overlap="buckets:B"``.
 
 See ``docs/comm.md`` for wire-format bit layouts, the collective ring
 patterns, and the cost-model math (including why a uniform link model can
@@ -32,7 +37,7 @@ All gradient aggregation in :mod:`repro.core.distributed` and
 :mod:`repro.core.simulator` routes through this package, selected by
 ``DistConfig.codec`` / ``DistConfig.collective`` ("auto" plans per leaf).
 """
-from repro.comm import autotune, calibrate, controller, fastpath
+from repro.comm import autotune, calibrate, controller, fastpath, overlap
 from repro.comm.autotune import (
     CommPlan,
     LeafDecision,
@@ -86,12 +91,24 @@ from repro.comm.cost import (
     payload_nbytes,
     predict,
     predicted_bytes,
+    stage_seconds,
 )
 from repro.comm.fastpath import (
     FASTPATH_MODES,
     ThroughputTable,
     fusable,
     fused_compact_select,
+)
+from repro.comm.overlap import (
+    Bucket,
+    BucketPlan,
+    LeafCost,
+    OverlapConfig,
+    Timeline,
+    bucketize,
+    leaf_cost,
+    overlap_timeline,
+    parse_overlap,
 )
 from repro.comm.participation import (
     PARTICIPATION_KINDS,
@@ -105,6 +122,8 @@ __all__ = [
     "AdaptiveKController",
     "AlphaBeta",
     "BitmapDense",
+    "Bucket",
+    "BucketPlan",
     "CODECS",
     "COLLECTIVES",
     "Calibration",
@@ -119,18 +138,22 @@ __all__ = [
     "DenseAllreduce",
     "FASTPATH_MODES",
     "Hierarchical",
+    "LeafCost",
     "LeafDecision",
     "LinkModel",
     "LinkTopo",
+    "OverlapConfig",
     "PARTICIPATION_KINDS",
     "Participation",
     "Sample",
     "SparseAllgather",
     "ThroughputTable",
+    "Timeline",
     "TopoCalibration",
     "WEIGHTINGS",
     "as_topo",
     "autotune",
+    "bucketize",
     "calibrate",
     "calibrate_topo",
     "check_weighting",
@@ -143,9 +166,13 @@ __all__ = [
     "fused_compact_select",
     "get_codec",
     "get_collective",
+    "leaf_cost",
     "measured_bytes",
+    "overlap",
+    "overlap_timeline",
     "parse_adaptive_k",
     "parse_link_topo",
+    "parse_overlap",
     "parse_participation",
     "pattern_axes",
     "payload_nbytes",
@@ -156,5 +183,6 @@ __all__ = [
     "replan",
     "round_wire_bits",
     "run_calibration",
+    "stage_seconds",
     "worker_index",
 ]

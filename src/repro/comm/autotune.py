@@ -44,7 +44,11 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 
-from repro.comm import cost as cost_lib, fastpath as fastpath_lib
+from repro.comm import (
+    cost as cost_lib,
+    fastpath as fastpath_lib,
+    overlap as overlap_lib,
+)
 from repro.comm.codec import CODECS, get_codec
 from repro.comm.collectives import COLLECTIVES, get_collective
 from repro.comm.cost import (
@@ -81,13 +85,22 @@ class CommPlan:
     """Per-leaf decisions (a pytree mirroring the ``LeafPlan`` tree) plus
     per-worker round totals under the link model that produced them.
     ``model`` is the :class:`LinkTopo` the planner actually scored with
-    (scalar :class:`AlphaBeta` inputs are normalized to a uniform topo)."""
+    (scalar :class:`AlphaBeta` inputs are normalized to a uniform topo).
+
+    ``buckets`` / ``timeline`` carry the bucketed overlap schedule when
+    the plan was built with ``overlap=`` (:mod:`repro.comm.overlap`):
+    per-bucket leaf groups with their (codec, collective) wire decisions,
+    and the predicted overlapped-timeline stamps whose ``seconds``
+    reduces to ``total_seconds`` at one bucket and never exceeds it.
+    ``total_seconds`` itself stays the synchronous per-leaf sum."""
 
     decisions: Any
     total_bytes: int
     total_messages: int
     total_seconds: float
     model: LinkTopo
+    buckets: Optional[overlap_lib.BucketPlan] = None
+    timeline: Optional[overlap_lib.Timeline] = None
 
     def flat(self):
         return jax.tree.leaves(
@@ -233,6 +246,7 @@ def plan_tree(
     participants: Optional[float] = None,
     fastpath: str = "off",
     compute: Optional[fastpath_lib.ThroughputTable] = None,
+    overlap: Optional[overlap_lib.OverlapConfig] = None,
 ) -> CommPlan:
     """Plan every leaf of a ``LeafPlan`` pytree (``repro.core.distributed``).
 
@@ -242,6 +256,12 @@ def plan_tree(
     :class:`LinkTopo`); the returned :class:`CommPlan` carries the
     normalized topology.
 
+    ``overlap`` additionally schedules the decided leaves into launch
+    buckets (:func:`repro.comm.overlap.bucketize` over each leaf's
+    per-axis stage seconds) and attaches the predicted overlapped
+    :class:`~repro.comm.overlap.Timeline` — ``timeline.seconds`` never
+    exceeds ``total_seconds`` and reduces to it at one bucket.
+
     >>> from jax.sharding import PartitionSpec as P
     >>> from repro.core.distributed import LeafPlan
     >>> tree = {"bias": LeafPlan((64,), (64,), 64, 4, P(None)),
@@ -249,6 +269,14 @@ def plan_tree(
     >>> cp = plan_tree(tree, (8,))
     >>> cp.decisions["bias"].codec, cp.decisions["embed"].codec
     ('coo_idx_delta', 'bitmap_dense')
+    >>> cp.buckets is None
+    True
+    >>> cp2 = plan_tree(tree, (8,),
+    ...                 overlap=overlap_lib.OverlapConfig(n_buckets=2))
+    >>> cp2.buckets.n_buckets, sorted(cp2.buckets.leaf_order())
+    (2, [0, 1])
+    >>> cp2.timeline.seconds <= cp2.total_seconds + 1e-12
+    True
     """
     from repro.core.distributed import LeafPlan  # cycle-free at call time
 
@@ -275,12 +303,38 @@ def plan_tree(
     flat = jax.tree.leaves(
         decisions, is_leaf=lambda x: isinstance(x, LeafDecision)
     )
+    buckets = timeline = None
+    if overlap is not None and flat:
+        plan_leaves = jax.tree.leaves(
+            plan, is_leaf=lambda x: isinstance(x, LeafPlan)
+        )
+        costs = [
+            overlap_lib.leaf_cost(
+                d.codec,
+                d.collective,
+                p.local_len,
+                p.k,
+                dp_sizes,
+                model,
+                word_bytes=(
+                    word_bytes
+                    if d.collective == "dense_allreduce"
+                    else WORD_BYTES
+                ),
+                participants=participants,
+            )
+            for p, d in zip(plan_leaves, flat, strict=True)
+        ]
+        buckets = overlap_lib.bucketize(costs, overlap)
+        timeline = overlap_lib.overlap_timeline(buckets)
     return CommPlan(
         decisions=decisions,
         total_bytes=sum(d.cost.bytes_on_wire for d in flat),
         total_messages=sum(d.cost.n_messages for d in flat),
         total_seconds=sum(d.cost.seconds for d in flat),
         model=model,
+        buckets=buckets,
+        timeline=timeline,
     )
 
 
@@ -297,6 +351,7 @@ def replan(
     participants: Optional[float] = None,
     fastpath: str = "off",
     compute: Optional[fastpath_lib.ThroughputTable] = None,
+    overlap: Optional[overlap_lib.OverlapConfig] = None,
 ) -> CommPlan:
     """Re-plan every leaf from *measured* round samples, mid-training.
 
@@ -352,4 +407,5 @@ def replan(
         participants=participants,
         fastpath=fastpath,
         compute=compute,
+        overlap=overlap,
     )

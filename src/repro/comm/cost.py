@@ -425,6 +425,50 @@ def predict(
     )
 
 
+def stage_seconds(
+    codec: Codec | str,
+    collective: str,
+    length: int,
+    k: int,
+    dp_sizes: Sequence[int],
+    model: LinkModel = AlphaBeta(),
+    word_bytes: int = WORD_BYTES,
+    participants: Optional[float] = None,
+) -> Tuple[float, ...]:
+    """Per-axis stage seconds of one leaf's round, aligned with
+    ``dp_sizes`` (outermost first) — the decomposition the bucketed
+    overlap scheduler (:mod:`repro.comm.overlap`) pipelines: the last
+    entry is the innermost (intra) stage, everything before it the outer
+    (inter) stages.
+
+    Each axis is priced independently from its :func:`pattern_axes`
+    contribution (``msgs_a * alpha_a + bytes_a * beta_a``), so the tuple
+    sums to :func:`predict`'s ``seconds`` — exactly on a heterogeneous
+    topology, and to fp summation order on a uniform one (where
+    :func:`predict` keeps the historical scalar operation order).
+
+    >>> slow_outer = LinkTopo((AlphaBeta(1e-5, 1e-9), AlphaBeta(1e-6, 1e-10)))
+    >>> ax = stage_seconds("coo_fp32", "hierarchical", 10**6, 10**5,
+    ...                    (2, 4), slow_outer)
+    >>> len(ax)
+    2
+    >>> est = predict("coo_fp32", "hierarchical", 10**6, 10**5, (2, 4),
+    ...               slow_outer)
+    >>> sum(ax) == est.seconds
+    True
+    """
+    c = get_codec(codec) if isinstance(codec, str) else codec
+    pb = math.ceil(int(c.wire_bits(length, k)) / 8)
+    per_axis = pattern_axes(
+        collective, length, pb, dp_sizes, word_bytes, participants
+    )
+    topo = as_topo(model, len(per_axis))
+    return tuple(
+        g * lk.alpha + b * lk.beta
+        for (b, g), lk in zip(per_axis, topo.links, strict=True)
+    )
+
+
 def parse_link_topo(spec: str, dp_axes: Sequence[str]) -> LinkTopo:
     """Parse a CLI link-topology spec into a :class:`LinkTopo` over
     ``dp_axes`` (outermost first).

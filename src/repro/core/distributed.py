@@ -29,8 +29,9 @@ optional (codec, collective) pair, filled by the alpha–beta planner
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +102,17 @@ class DistConfig:
     # (sent_w), which RegTop-k's posterior then conditions on; "worker"
     # is the historical per-worker Eq. (8) reduction, bit-for-bit.
     weighting: str = "worker"
+    # bucketed overlap schedule ("off" | "buckets:B", comm.overlap;
+    # train.py's --overlap). "buckets:B" splits the leaf tree into B
+    # size-balanced launch buckets (greedy bin-pack on predicted per-axis
+    # wire seconds) so each bucket's collective launches as soon as its
+    # backward slice is done and hierarchical's slow inter-axis stage
+    # pipelines behind the next bucket's intra-axis work. Numerics are
+    # untouched (bucketing only reorders independent per-leaf rounds):
+    # "off" and any B are bit-for-bit identical; what changes is the
+    # predicted round timeline (comm_round_timeline, metrics["timeline"])
+    # and the profiler annotation structure (jax.named_scope per bucket).
+    overlap: str = "off"
 
     def resolved_collective(self) -> str:
         return self.collective or self.aggregation
@@ -170,6 +182,13 @@ class DistConfig:
         if self.link_topo is not None:
             return self.link_topo
         return self.link_model or comm.AlphaBeta()
+
+    def resolved_overlap(self) -> Optional[comm.OverlapConfig]:
+        """The active bucketed-overlap config, or None when "off" —
+        callers skip bucket scheduling entirely on None. The spec is
+        validated here (unknown specs / non-positive bucket counts
+        raise)."""
+        return comm.parse_overlap(self.overlap)
 
     def resolved_adaptive_k(self) -> Optional[comm.AdaptiveKController]:
         """The active controller, with the config gates applied: adaptive
@@ -661,6 +680,21 @@ def make_sparsify_aggregate(
                     "build_plan(..., dist=dist) so capacities sit at k_max"
                 )
 
+    # bucketed overlap: precompute the leaf launch order (and the profiler
+    # scope names) at trace time. Off keeps the flat single-group order —
+    # the historical program, bit-for-bit; buckets only *reorder* the
+    # independent per-leaf rounds and annotate them with jax.named_scope,
+    # so the math is identical either way.
+    ocfg = dist.resolved_overlap()
+    bucket_order: List[Tuple[int, ...]] = [tuple(range(len(plan_flat)))]
+    bucket_scopes: List[Optional[str]] = [None]
+    if ocfg is not None and plan_flat:
+        bplan = comm.bucketize(_leaf_overlap_costs(plan, dist, mesh), ocfg)
+        bucket_order = [b.leaves for b in bplan.buckets]
+        bucket_scopes = [
+            f"spa_bucket{i:03d}" for i in range(len(bucket_order))
+        ]
+
     def rounds(grads, state, ctrl=None):
         g_flat = plan_def.flatten_up_to(grads)
         s_flat = plan_def.flatten_up_to(state)
@@ -677,17 +711,22 @@ def make_sparsify_aggregate(
             plan_def.flatten_up_to(ctrl) if ctrl is not None
             else [None] * len(plan_flat)
         )
-        outs = [
-            _spa_leaf(
-                g, s, p, scfg, codec, sname, dp, part_ctx, fval,
-                k_dyn=None if c is None else c.k,
-                weighting=weighting,
+        outs: List = [None] * len(plan_flat)
+        for scope, leaves in zip(bucket_scopes, bucket_order, strict=True):
+            ctx = (
+                jax.named_scope(scope) if scope
+                else contextlib.nullcontext()
             )
-            for g, s, p, codec, (_, sname), fval, c in zip(
-                g_flat, s_flat, plan_flat, leaf_codecs, wires, fused_flags,
-                c_flat, strict=True
-            )
-        ]
+            with ctx:
+                for i in leaves:
+                    c = c_flat[i]
+                    outs[i] = _spa_leaf(
+                        g_flat[i], s_flat[i], plan_flat[i], scfg,
+                        leaf_codecs[i], wires[i][1], dp, part_ctx,
+                        fused_flags[i],
+                        k_dyn=None if c is None else c.k,
+                        weighting=weighting,
+                    )
         agg = jax.tree.unflatten(plan_def, [o[0] for o in outs])
         new_state = jax.tree.unflatten(plan_def, [o[1] for o in outs])
         if ctrl is None:
@@ -823,6 +862,45 @@ def comm_round_cost(plan, dist: DistConfig, mesh) -> comm.CostEstimate:
     )
 
 
+def _leaf_overlap_costs(plan, dist: DistConfig, mesh):
+    """Per-leaf :class:`repro.comm.LeafCost` rows (bytes + per-axis stage
+    seconds) in flat plan order, under ``dist``'s resolved link model —
+    the :func:`repro.comm.bucketize` input. Word sizing and collective
+    resolution are shared with byte/cost accounting via
+    ``_leaf_wire_patterns``, so the bucket schedule prices exactly the
+    wire the round runs."""
+    dp_sizes = [mesh.shape[a] for a in dist.dp_axes]
+    model = dist.resolved_link_model()
+    participants = _dist_participants(dist, mesh)
+    return [
+        comm.leaf_cost(
+            codec, coll, p.local_len, p.k, dp_sizes, model,
+            word_bytes=wb, participants=participants,
+        )
+        for p, codec, coll, wb, _ in _leaf_wire_patterns(plan, dist)
+    ]
+
+
+def comm_round_timeline(
+    plan, dist: DistConfig, mesh, compute_seconds=None
+) -> Tuple[comm.BucketPlan, comm.Timeline]:
+    """The bucket schedule and predicted overlapped timeline of one round
+    under ``dist.resolved_overlap()`` (raises when overlap is "off" —
+    there is no schedule to report). ``compute_seconds`` optionally
+    threads per-bucket backward-slice times into the launch stamps;
+    ``timeline.sync_seconds`` matches :func:`comm_round_cost`'s
+    ``seconds`` to fp summation order, and ``timeline.seconds`` never
+    exceeds it."""
+    ocfg = dist.resolved_overlap()
+    if ocfg is None:
+        raise ValueError(
+            "comm_round_timeline needs DistConfig.overlap != 'off' "
+            "(e.g. overlap='buckets:4')"
+        )
+    bplan = comm.bucketize(_leaf_overlap_costs(plan, dist, mesh), ocfg)
+    return bplan, comm.overlap_timeline(bplan, compute_seconds)
+
+
 # ---------------------------------------------------------------------------
 # train step
 # ---------------------------------------------------------------------------
@@ -853,6 +931,21 @@ def make_train_step(
         tuple(dist.dp_axes) if len(dist.dp_axes) > 1 else dist.dp_axes[0]
     )
     wire_pred, wire_meas = comm_round_bytes(plan, dist, mesh)
+    # bucketed overlap instrumentation: the per-bucket (launch, complete)
+    # stamps of the predicted round timeline, surfaced every step as
+    # metrics["timeline"] [n_buckets, 2] alongside the jax.named_scope
+    # annotations the aggregation emits per bucket (profiler-visible —
+    # jax.profiler traces group the collectives under spa_bucketNNN).
+    timeline_stamps = None
+    if dist.resolved_overlap() is not None:
+        _, tl = comm_round_timeline(plan, dist, mesh)
+        timeline_stamps = np.stack(
+            [
+                np.asarray(tl.launch, np.float32),
+                np.asarray(tl.complete, np.float32),
+            ],
+            axis=1,
+        )
 
     acc_dt = _DT[dist.state_dtype]
 
@@ -909,6 +1002,8 @@ def make_train_step(
             "comm_bytes": jnp.asarray(wire_meas, jnp.float32),
             "comm_bytes_predicted": jnp.asarray(wire_pred, jnp.float32),
         }
+        if timeline_stamps is not None:
+            metrics["timeline"] = jnp.asarray(timeline_stamps)
         if adaptive:
             # the k each leaf *used* this round (ctrl carries next round's)
             ks = [

@@ -97,8 +97,18 @@ class DistributedSim:
     # mass back into RegTop-k's posterior; "worker" is the historical
     # per-worker Eq. (8) reduction, bit-for-bit.
     weighting: str = "worker"
+    # bucketed overlap spec ("off" | "buckets:B", see repro.comm.overlap).
+    # The sim aggregates one flat vector — a single leaf — so any B clamps
+    # to one bucket and the numerics are untouched by construction; what
+    # the spec buys here is pricing: round_timeline() reports the same
+    # BucketPlan/Timeline pair the distributed runtime would predict, so
+    # overlap sweeps can be costed without an 8-device mesh.
+    overlap: str = "off"
 
     def __post_init__(self):
+        # parse (and thereby validate) the overlap spec up front — a bad
+        # spec fails at construction, not at the first round_timeline().
+        self._overlap_cfg = comm.parse_overlap(self.overlap)
         if self.fastpath not in comm.FASTPATH_MODES:
             raise ValueError(
                 f"unknown fastpath {self.fastpath!r}; "
@@ -555,6 +565,39 @@ class DistributedSim:
             self.resolved_link_model if model is None else model,
             participants=self._participants,
         )
+
+    def round_timeline(
+        self, compute_seconds=None
+    ) -> Tuple[comm.BucketPlan, comm.Timeline]:
+        """The bucket schedule and predicted overlapped timeline of one
+        round under ``overlap`` (raises when "off"), mirroring
+        ``distributed.comm_round_timeline`` for the sim's single leaf:
+        ``timeline.sync_seconds`` equals ``wire_bytes_per_round().seconds``
+        up to fp summation order, and with one leaf the schedule clamps to
+        one bucket, so ``timeline.seconds`` matches it too."""
+        if self._overlap_cfg is None:
+            raise ValueError(
+                "round_timeline needs overlap != 'off' "
+                "(e.g. overlap='buckets:4')"
+            )
+        k = (
+            self._k_bounds[1]
+            if self._k_bounds is not None
+            else sel_lib.sparsity_to_k(
+                self.length, self.sparsifier.cfg.sparsity
+            )
+        )
+        lc = comm.leaf_cost(
+            self._codec,
+            self.resolved_collective,
+            self.length,
+            k,
+            self._dp_sizes,
+            self.resolved_link_model,
+            participants=self._participants,
+        )
+        bplan = comm.bucketize([lc], self._overlap_cfg)
+        return bplan, comm.overlap_timeline(bplan, compute_seconds)
 
     def run(
         self,

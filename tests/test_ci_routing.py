@@ -1,0 +1,191 @@
+"""CI meta-tests (ISSUE 10 satellites).
+
+* ``tools/check_ci_routing.py`` — the fast/slow test-lane partition
+  guard: green on this repo's real workflow, and provably red on fixture
+  workflows with an unrouted, double-routed, or phantom test file.
+* ``benchmarks/run.py`` — the MODULES list and the module docstring must
+  stay in sync (the drift this PR fixed for ``serve_bench``).
+* ``tools/update_baselines.py`` — every bench it records a baseline for
+  must be gated by a ``check_perf`` step in the workflow, and its
+  post-write self-check must catch a truncated baseline.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO_ROOT)
+
+from tools import check_ci_routing, check_perf, update_baselines  # noqa: E402
+
+WORKFLOW_TEMPLATE = """\
+name: ci
+jobs:
+  tier1-fast:
+    steps:
+      - name: fast
+        run: >
+          PYTHONPATH=src python -m pytest -x -q
+{ignores}
+  other-job:
+    steps:
+      - name: unrelated
+        run: echo tests/test_red_herring.py
+  tier1-slow:
+    steps:
+      - name: slow
+        run: >
+          PYTHONPATH=src python -m pytest -x -q
+          {slow}
+"""
+
+
+def _fixture(tmp_path, ignores, slow, on_disk):
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    for name in on_disk:
+        (tests / name).write_text("")
+    wf = tmp_path / "ci.yml"
+    wf.write_text(
+        WORKFLOW_TEMPLATE.format(
+            ignores="\n".join(f"          --ignore={p}" for p in ignores),
+            slow=" ".join(slow),
+        )
+    )
+    return check_ci_routing.check(str(wf), str(tests))
+
+
+def test_real_workflow_is_green():
+    assert (
+        check_ci_routing.check(
+            os.path.join(REPO_ROOT, ".github", "workflows", "ci.yml"),
+            os.path.join(REPO_ROOT, "tests"),
+        )
+        == []
+    )
+    assert check_ci_routing.main([]) == 0
+
+
+def test_partition_green_fixture(tmp_path):
+    assert (
+        _fixture(
+            tmp_path,
+            ignores=["tests/test_slow.py"],
+            slow=["tests/test_slow.py"],
+            on_disk=["test_slow.py", "test_fast.py"],
+        )
+        == []
+    )
+
+
+def test_unrouted_file_fails(tmp_path):
+    """Ignored in fast but absent from slow: the file runs nowhere."""
+    problems = _fixture(
+        tmp_path,
+        ignores=["tests/test_slow.py", "tests/test_orphan.py"],
+        slow=["tests/test_slow.py"],
+        on_disk=["test_slow.py", "test_orphan.py"],
+    )
+    assert any("test_orphan" in p and "no lane" in p for p in problems)
+
+
+def test_double_routed_file_fails(tmp_path):
+    """In slow but not ignored by fast: the file runs twice."""
+    problems = _fixture(
+        tmp_path,
+        ignores=["tests/test_slow.py"],
+        slow=["tests/test_slow.py", "tests/test_dup.py"],
+        on_disk=["test_slow.py", "test_dup.py"],
+    )
+    assert any("test_dup" in p and "twice" in p for p in problems)
+
+
+def test_phantom_file_fails(tmp_path):
+    problems = _fixture(
+        tmp_path,
+        ignores=["tests/test_ghost.py"],
+        slow=["tests/test_ghost.py"],
+        on_disk=[],
+    )
+    assert any("does not exist" in p for p in problems)
+
+
+def test_other_jobs_do_not_count(tmp_path):
+    """A tests/ path mentioned in an unrelated job must not be treated
+    as routed (the parser is scoped to the two tier1 job blocks)."""
+    problems = _fixture(
+        tmp_path,
+        ignores=["tests/test_slow.py"],
+        slow=["tests/test_slow.py"],
+        on_disk=["test_slow.py"],
+    )
+    assert not any("red_herring" in p for p in problems)
+
+
+def test_main_red_exit(tmp_path):
+    _fixture(
+        tmp_path,
+        ignores=["tests/test_orphan.py"],
+        slow=[],
+        on_disk=["test_orphan.py"],
+    )
+    rc = check_ci_routing.main(
+        ["--workflow", str(tmp_path / "ci.yml"),
+         "--tests", str(tmp_path / "tests")]
+    )
+    assert rc == 1
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py docstring <-> MODULES sync
+# ---------------------------------------------------------------------------
+
+
+def test_run_modules_documented():
+    from benchmarks import run as bench_run
+
+    doc = bench_run.__doc__
+    missing = [m for m in bench_run.MODULES if m not in doc]
+    assert not missing, (
+        f"benchmarks/run.py docstring is missing MODULES entries: {missing}"
+    )
+
+
+def test_run_modules_exist():
+    for m in __import__("benchmarks.run", fromlist=["MODULES"]).MODULES:
+        path = os.path.join(REPO_ROOT, "benchmarks", f"{m}.py")
+        assert os.path.exists(path), f"MODULES lists {m} but {path} missing"
+
+
+# ---------------------------------------------------------------------------
+# update_baselines self-checks
+# ---------------------------------------------------------------------------
+
+
+def test_baselines_have_ci_gates():
+    assert update_baselines.check_ci_gates() == []
+
+
+def test_baseline_files_committed():
+    for fname in update_baselines.BENCHES.values():
+        path = os.path.join(REPO_ROOT, "benchmarks", "baselines", fname)
+        assert os.path.exists(path), f"baseline {fname} not committed"
+
+
+@pytest.mark.parametrize("fail_on_new", [False, True])
+def test_check_perf_fail_on_new(tmp_path, fail_on_new):
+    """A current row with no baseline entry passes by default and fails
+    under --fail-on-new (the update_baselines self-check)."""
+    meta = {"calib_us": 100.0, "jax": "x"}
+    base = {"meta": meta, "rows": [
+        {"name": "a", "us_per_call": 50.0, "derived": ""}]}
+    cur = {"meta": meta, "rows": [
+        {"name": "a", "us_per_call": 50.0, "derived": ""},
+        {"name": "b_new", "us_per_call": 10.0, "derived": ""}]}
+    bp, cp = tmp_path / "base.json", tmp_path / "cur.json"
+    bp.write_text(json.dumps(base))
+    cp.write_text(json.dumps(cur))
+    argv = [str(cp), str(bp)] + (["--fail-on-new"] if fail_on_new else [])
+    assert check_perf.main(argv) == (1 if fail_on_new else 0)

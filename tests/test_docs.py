@@ -60,6 +60,7 @@ COMM_MODULES = [
     "repro.comm.calibrate",
     "repro.comm.participation",
     "repro.comm.controller",
+    "repro.comm.overlap",
 ]
 
 

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""CI test-lane routing guard: fast ignore-list == slow file-list.
+
+The tier-1 suite is split across two CI jobs: ``tier1-fast`` runs pytest
+with an ``--ignore=tests/...`` list, and ``tier1-slow`` runs an explicit
+file list. The invariant that makes the split safe is *exact
+partitioning*: every ``tests/test_*.py`` file runs in exactly one lane —
+fast picks up everything not ignored, so the ignore list and the slow
+list must be the same set, every listed file must exist, and every test
+file on disk that lands in the slow lane must be deliberate.
+
+A new test file is routed correctly by default (fast runs whatever is not
+ignored), but two drift modes are silent without this check:
+
+* a file added to the slow job but not to the fast ignore list runs
+  *twice* (wasted minutes, and ``-x`` failures point at the wrong lane);
+* a file ignored in fast but dropped from slow runs *nowhere* — a test
+  that cannot fail.
+
+This script regex-parses the workflow (no yaml dependency in the image)
+scoped to each job's block, and fails on any asymmetry. Wired as a step
+in the CI ``static`` job; ``--workflow``/``--tests`` exist so the fixture
+tests in ``tests/test_ci_routing.py`` can point it at synthetic trees.
+
+Usage: python tools/check_ci_routing.py [--workflow PATH] [--tests DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FAST_JOB = "tier1-fast"
+SLOW_JOB = "tier1-slow"
+_IGNORE_RE = re.compile(r"--ignore=(\S+)")
+_TESTFILE_RE = re.compile(r"(?<!=)\btests/test_\w+\.py\b")
+
+
+def job_block(workflow_text: str, job: str) -> str:
+    """The text of one job's block: from its key line to the next line at
+    the same (2-space) indentation — robust to step reordering, blind to
+    yaml semantics we don't need."""
+    m = re.search(rf"^  {re.escape(job)}:\s*$", workflow_text, re.M)
+    if not m:
+        raise SystemExit(f"job {job!r} not found in workflow")
+    rest = workflow_text[m.end():]
+    nxt = re.search(r"^  \S", rest, re.M)
+    return rest[: nxt.start()] if nxt else rest
+
+
+def fast_ignores(workflow_text: str) -> set:
+    """tests/... paths the fast lane ignores."""
+    return set(_IGNORE_RE.findall(job_block(workflow_text, FAST_JOB)))
+
+
+def slow_files(workflow_text: str) -> set:
+    """tests/test_*.py paths the slow lane runs explicitly (the
+    ``--ignore=`` guard keeps a hypothetical ignore flag inside the slow
+    job from counting as a run)."""
+    return set(_TESTFILE_RE.findall(job_block(workflow_text, SLOW_JOB)))
+
+
+def check(workflow_path: str, tests_dir: str) -> list:
+    """All routing violations (empty == healthy)."""
+    with open(workflow_path, encoding="utf-8") as f:
+        wf = f.read()
+    ignores = fast_ignores(wf)
+    slow = slow_files(wf)
+    repo = os.path.dirname(os.path.abspath(tests_dir))
+    on_disk = {
+        os.path.relpath(p, repo).replace(os.sep, "/")
+        for p in glob.glob(os.path.join(tests_dir, "test_*.py"))
+    }
+    problems = []
+    for path in sorted(ignores - slow):
+        problems.append(
+            f"{path}: ignored by {FAST_JOB} but not run by {SLOW_JOB} — "
+            "this file runs in no lane"
+        )
+    for path in sorted(slow - ignores):
+        problems.append(
+            f"{path}: run by {SLOW_JOB} but not ignored by {FAST_JOB} — "
+            "this file runs twice"
+        )
+    for path in sorted((ignores | slow) - on_disk):
+        problems.append(f"{path}: routed in CI but does not exist")
+    for path in sorted(ignores | slow):
+        base = path.rsplit("/", 1)[-1]
+        if not re.fullmatch(r"test_\w+\.py", base):
+            problems.append(
+                f"{path}: routed path does not match tests/test_*.py"
+            )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--workflow",
+        default=os.path.join(REPO_ROOT, ".github", "workflows", "ci.yml"),
+        help="workflow file to parse (default: this repo's ci.yml)",
+    )
+    ap.add_argument(
+        "--tests",
+        default=os.path.join(REPO_ROOT, "tests"),
+        help="tests directory the routed paths must exist in",
+    )
+    args = ap.parse_args(argv)
+    problems = check(args.workflow, args.tests)
+    if problems:
+        print(
+            f"check_ci_routing: {len(problems)} violation(s)",
+            file=sys.stderr,
+        )
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print("check_ci_routing: OK — fast/slow lanes partition tests exactly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,12 +27,15 @@ Two noise guards keep the 1.5x threshold meaningful on CPU runners:
   floor.
 
 Rows present only in the current run are informational (new kernels have
-no baseline yet — refresh with `tools/update_baselines.py`); rows that
-*disappeared* from the current run fail, so a silently dropped benchmark
-cannot masquerade as a perf win.
+no baseline yet — refresh with `tools/update_baselines.py`) unless
+``--fail-on-new`` is given, which turns every such line into a failure —
+`tools/update_baselines.py` uses it to self-check that the baseline it
+just wrote covers every row the bench emits. Rows that *disappeared*
+from the current run always fail, so a silently dropped benchmark cannot
+masquerade as a perf win.
 
 Usage: python tools/check_perf.py CURRENT.json BASELINE.json
-       [--max-ratio R] [--slack-us US]
+       [--max-ratio R] [--slack-us US] [--fail-on-new]
 """
 from __future__ import annotations
 
@@ -65,6 +68,10 @@ def main(argv=None) -> int:
                          "microseconds: rows slower by less than this "
                          "(after calibration conversion) never fail — "
                          "sub-5ms CPU rows jitter past any ratio")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="treat rows with no baseline entry as failures "
+                         "instead of informational (the baseline self-"
+                         "check in tools/update_baselines.py)")
     args = ap.parse_args(argv)
 
     cur, cur_calib, cur_meta = load(args.current)
@@ -102,6 +109,8 @@ def main(argv=None) -> int:
     for name in sorted(set(cur) - set(base)):
         print(f"  new  {name}: {cur[name]:.0f}us (no baseline — refresh "
               "with tools/update_baselines.py)")
+        if args.fail_on_new:
+            failures.append(f"{name}: new row with no baseline entry")
 
     if failures:
         print(f"check_perf: {len(failures)} regression(s)", file=sys.stderr)

@@ -2,12 +2,20 @@
 """Refresh the committed perf baselines in `benchmarks/baselines/`.
 
 Runs the JSON-emitting benches (`benchmarks/kernel_bench.py`,
-`benchmarks/comm_bench.py`, `benchmarks/adaptive_bench.py`) in-process and
-rewrites ``benchmarks/baselines/BENCH_kernels.json`` /
-``BENCH_comm.json`` / ``BENCH_adaptive.json`` — the files the CI ``perf`` job
-gates new runs against via `tools/check_perf.py`. Timings are stored
-alongside the run's calibration constant, so baselines recorded on one
-machine remain comparable (ratio-of-ratios) on another.
+`benchmarks/comm_bench.py`, `benchmarks/adaptive_bench.py`, ...) in-process
+and rewrites ``benchmarks/baselines/BENCH_kernels.json`` /
+``BENCH_comm.json`` / ... — the files the CI ``perf`` job gates new runs
+against via `tools/check_perf.py`. Timings are stored alongside the run's
+calibration constant, so baselines recorded on one machine remain
+comparable (ratio-of-ratios) on another.
+
+After writing each baseline this script *re-runs* the gate against it
+(`check_perf --fail-on-new` on the very rows just recorded) and fails on
+any remaining "new row, no baseline" line — a half-written or truncated
+baseline cannot be committed silently. It also cross-checks that every
+baseline file in ``BENCHES`` is actually gated by a ``tools/check_perf.py``
+step in `.github/workflows/ci.yml`, so adding a bench here without wiring
+its CI gate fails loudly.
 
 Run from the repo root after a deliberate perf-relevant change, and
 commit the result:
@@ -18,6 +26,7 @@ from __future__ import annotations
 
 import os
 import sys
+import tempfile
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path[:0] = [os.path.join(REPO_ROOT, "src"), REPO_ROOT]
@@ -27,21 +36,67 @@ BENCHES = {
     "comm_bench": "BENCH_comm.json",
     "adaptive_bench": "BENCH_adaptive.json",
     "fleet_bench": "BENCH_fleet.json",
+    "overlap_bench": "BENCH_overlap.json",
 }
+
+CI_WORKFLOW = os.path.join(REPO_ROOT, ".github", "workflows", "ci.yml")
+
+
+def check_ci_gates() -> list:
+    """Every BENCHES baseline must appear in a CI check_perf gate step."""
+    if not os.path.exists(CI_WORKFLOW):
+        return [f"missing workflow {CI_WORKFLOW}"]
+    with open(CI_WORKFLOW, encoding="utf-8") as f:
+        # collapse yaml '>' line folding so multi-line run: commands
+        # compare as the single command line the shell sees
+        wf = " ".join(f.read().split())
+    problems = []
+    for fname in BENCHES.values():
+        gate = f"tools/check_perf.py {fname} benchmarks/baselines/{fname}"
+        if gate not in wf:
+            problems.append(
+                f"{fname}: no '{gate}' step in .github/workflows/ci.yml"
+            )
+    return problems
 
 
 def main() -> int:
     import importlib
 
     from benchmarks.common import write_json
+    from tools import check_perf
 
+    problems = check_ci_gates()
+    for p in problems:
+        print(f"update_baselines: CI gate missing — {p}", file=sys.stderr)
     out_dir = os.path.join(REPO_ROOT, "benchmarks", "baselines")
     os.makedirs(out_dir, exist_ok=True)
+    failures = len(problems)
     for mod_name, fname in BENCHES.items():
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         rows = mod.run()
-        write_json(os.path.join(out_dir, fname), mod_name, rows)
-    return 0
+        baseline = os.path.join(out_dir, fname)
+        write_json(baseline, mod_name, rows)
+        # self-check: the rows just timed, gated against the baseline just
+        # written, must come back clean with zero "new row" lines — this
+        # catches a truncated write or a bench emitting nondeterministic
+        # row names before the broken baseline lands in a commit.
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False
+        ) as tf:
+            current = tf.name
+        try:
+            write_json(current, mod_name, rows)
+            rc = check_perf.main([current, baseline, "--fail-on-new"])
+        finally:
+            os.unlink(current)
+        if rc != 0:
+            print(
+                f"update_baselines: self-check failed for {fname}",
+                file=sys.stderr,
+            )
+            failures += 1
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
